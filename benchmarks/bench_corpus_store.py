@@ -1,0 +1,48 @@
+"""End-to-end compressed corpus store: ingest rate, size, serving rate."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import TokenBatcher, build_compressed_corpus, make_corpus
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 21, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    for vocab in (50280, 151936):
+        toks = make_corpus(n, vocab, seed=0)
+        t0 = time.perf_counter()
+        corpus = build_compressed_corpus(toks, vocab, shard_bits=18)
+        jax.block_until_ready(jax.tree.leaves(corpus.shards)[0])
+        t_ing = time.perf_counter() - t0
+        record(rows, f"corpus_ingest_v{vocab}_n{n}", t_ing,
+               mtok_per_s=round(n / t_ing / 1e6, 2),
+               bits_per_token=round(corpus.bits_per_token(), 2),
+               compression_vs_u32=round(32 / corpus.bits_per_token(), 2))
+
+        pos = jnp.asarray(np.random.default_rng(1).integers(0, n, 1 << 14),
+                          jnp.int32)
+        f = jax.jit(corpus.access)
+        t = time_fn(f, pos, iters=3)
+        record(rows, f"corpus_random_access_v{vocab}_batch{1 << 14}", t,
+               mtok_per_s=round(pos.shape[0] / t / 1e6, 2))
+
+        batcher = TokenBatcher(corpus=corpus, batch=8, seq_len=1024, seed=0)
+        t0 = time.perf_counter()
+        for s in range(3):
+            batcher.batch_at(s)
+        t_b = (time.perf_counter() - t0) / 3
+        record(rows, f"corpus_batcher_8x1024_v{vocab}", t_b,
+               mtok_per_s=round(8 * 1025 / t_b / 1e6, 2))
+    if out is None:
+        save(rows, "corpus_store.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

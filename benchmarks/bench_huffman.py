@@ -1,0 +1,47 @@
+"""Paper Table 1, rows 4–5: arbitrary-shaped (Huffman) wavelet trees.
+
+Construction throughput on Zipf-skewed data plus the entropy win: the
+Huffman tree's total bits vs the balanced tree's n·⌈logσ⌉.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.huffman import build_huffman_wavelet_tree, huffman_codebook
+from repro.core.wavelet_matrix import num_levels
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 19, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    rng = np.random.default_rng(0)
+    for sigma, zipf in ((256, 1.2), (4096, 1.2)):
+        p = np.arange(1, sigma + 1) ** (-zipf)
+        seq = rng.choice(sigma, size=n, p=p / p.sum()).astype(np.uint32)
+        freqs = np.bincount(seq, minlength=sigma) + 1
+        codes, lengths, max_len = huffman_codebook(freqs)
+        seqj = jnp.asarray(seq)
+        cj, lj = jnp.asarray(codes), jnp.asarray(lengths)
+        f = jax.jit(functools.partial(build_huffman_wavelet_tree,
+                                      max_len=max_len))
+        t = time_fn(f, seqj, cj, lj, iters=3)
+        tree = f(seqj, cj, lj)
+        total_bits = int(tree.total_bits)
+        balanced = n * num_levels(sigma)
+        record(rows, f"huffman_n{n}_s{sigma}_z{zipf}", t,
+               melem_per_s=round(n / t / 1e6, 1),
+               height=max_len,
+               bits_vs_balanced=round(total_bits / balanced, 3),
+               avg_code_len=round(total_bits / n, 2))
+    if out is None:
+        save(rows, "huffman.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+emulation — correctness, not speed), so the timed numbers that matter here
+are the pure-jnp reference paths the XLA:CPU backend compiles. The
+interpret-mode numbers are recorded once for completeness and marked as
+such; on TPU the pallas_call path replaces both.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 22, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    rng = np.random.default_rng(0)
+    bits = jnp.asarray(rng.integers(0, 2, n).astype(np.uint8))
+
+    f = jax.jit(ref.bitpack_ref)
+    t = time_fn(f, bits, iters=5)
+    record(rows, f"bitpack_ref_n{n}", t, gbits_per_s=round(n / t / 1e9, 2))
+
+    words = ref.bitpack_ref(bits)
+    f = jax.jit(functools.partial(ref.rank_build_ref, n=n))
+    t = time_fn(f, words, iters=5)
+    record(rows, f"rank_build_ref_n{n}", t, gbits_per_s=round(n / t / 1e9, 2))
+
+    sub = jnp.asarray(rng.integers(0, 256, n).astype(np.uint32))
+    f = jax.jit(functools.partial(ref.wm_level_step_ref, shift=3, n=n))
+    t = time_fn(f, sub, iters=3)
+    record(rows, f"wm_level_ref_n{n}", t, melem_per_s=round(n / t / 1e6, 1))
+
+    # interpret-mode sanity timings on a small size (Python emulation)
+    small = 1 << 16
+    bs = jnp.asarray(rng.integers(0, 2, small).astype(np.uint8))
+    t = time_fn(lambda x: ops.bitpack(x, interpret=True), bs, iters=1,
+                warmup=1)
+    record(rows, f"bitpack_pallas_interpret_n{small}", t, note="emulation")
+    ss = jnp.asarray(rng.integers(0, 256, small).astype(np.uint32))
+    t = time_fn(lambda x: ops.wm_level_step(x, 3, small, interpret=True),
+                ss, iters=1, warmup=1)
+    record(rows, f"wm_level_pallas_interpret_n{small}", t, note="emulation")
+    if out is None:
+        save(rows, "kernels.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,38 @@
+"""Paper Table 1, row 6: multiary wavelet trees (Theorem 4.4).
+
+Degree d = 2^width cuts the number of levels by ⌈logσ⌉/log d; each level
+stores a generalized rank/select structure (Section 5.2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.multiary import build_multiary_wavelet_tree
+from repro.core.wavelet_matrix import num_levels
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 19, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    sigma = 4096
+    seq = jnp.asarray(np.random.default_rng(0)
+                      .integers(0, sigma, n).astype(np.uint32))
+    for width in (1, 2, 4):
+        f = jax.jit(functools.partial(build_multiary_wavelet_tree,
+                                      sigma=sigma, width=width))
+        t = time_fn(f, seq, iters=3)
+        record(rows, f"multiary_d{1 << width}_n{n}_s{sigma}", t,
+               melem_per_s=round(n / t / 1e6, 1),
+               levels=-(-num_levels(sigma) // width))
+    if out is None:
+        save(rows, "multiary.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

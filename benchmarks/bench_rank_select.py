@@ -1,0 +1,77 @@
+"""Paper Table 1, rows 8–10: rank/select structure construction.
+
+Binary (Theorem 5.1): O(n/log n) work — construction runs on the packed
+words (popcount + prefix sum), so throughput is reported in bits/s.
+Generalized (Theorem 5.2): σ-ary structures for σ ∈ {2,4,16}.
+Also times query throughput (rank / select / access), since wavelet-tree
+query cost is what the structures exist for.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.core.rank_select import (build_binary_rank, build_binary_select,
+                                    build_bitvector, build_generalized,
+                                    generalized_rank, rank1, select1)
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 24, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    rng = np.random.default_rng(0)
+    bits = (rng.random(n) < 0.5).astype(np.uint8)
+    words = bitops.pack_bits(bitops.pad_bits(jnp.asarray(bits)))
+
+    f = jax.jit(functools.partial(build_binary_rank, n=n))
+    t = time_fn(f, words, iters=5)
+    record(rows, f"binary_rank_build_n{n}", t,
+           gbits_per_s=round(n / t / 1e9, 2))
+
+    f = jax.jit(functools.partial(build_binary_select, n=n, sample_rate=512))
+    t = time_fn(f, words, iters=5)
+    record(rows, f"binary_select_build_n{n}", t,
+           gbits_per_s=round(n / t / 1e9, 2))
+
+    bv = build_bitvector(words, n, 512)
+    q = jnp.asarray(rng.integers(0, n, 1 << 16), jnp.int32)
+    f = jax.jit(lambda idx: rank1(bv.rank, idx))
+    t = time_fn(f, q, iters=5)
+    record(rows, f"rank1_query_batch{1 << 16}", t,
+           mq_per_s=round(q.shape[0] / t / 1e6, 1))
+
+    total_ones = int(bits.sum())
+    k = jnp.asarray(rng.integers(0, total_ones, 1 << 16), jnp.int32)
+    f = jax.jit(lambda kk: select1(bv.rank, bv.sel1, kk))
+    t = time_fn(f, k, iters=5)
+    record(rows, f"select1_query_batch{1 << 16}", t,
+           mq_per_s=round(k.shape[0] / t / 1e6, 1))
+
+    # generalized structures (σ-ary)
+    gn = 1 << 22
+    for width in (1, 2, 4):
+        sigma = 1 << width
+        seq = jnp.asarray(rng.integers(0, sigma, gn).astype(np.uint32))
+        f = jax.jit(functools.partial(build_generalized, width=width, n=gn))
+        t = time_fn(f, seq, iters=3)
+        record(rows, f"generalized_build_s{sigma}_n{gn}", t,
+               msym_per_s=round(gn / t / 1e6, 1))
+        g = f(seq)
+        qq = jnp.asarray(rng.integers(0, gn, 4096), jnp.int32)
+        cc = jnp.asarray(rng.integers(0, sigma, 4096), jnp.int32)
+        fq = jax.jit(lambda c, i: generalized_rank(g, c, i))
+        t = time_fn(fq, cc, qq, iters=5)
+        record(rows, f"generalized_rank_s{sigma}_batch4096", t,
+               mq_per_s=round(4096 / t / 1e6, 2))
+    if out is None:
+        save(rows, "rank_select.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Table 1, row 7: wavelet matrix construction (Theorem 4.5)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wavelet_matrix import (build_wavelet_matrix,
+                                       build_wavelet_matrix_levelwise,
+                                       num_levels)
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 20, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    for sigma in (256, 65536):
+        seq = jnp.asarray(np.random.default_rng(0)
+                          .integers(0, sigma, n).astype(np.uint32))
+        nbits = num_levels(sigma)
+        f = jax.jit(functools.partial(build_wavelet_matrix_levelwise,
+                                      sigma=sigma))
+        t = time_fn(f, seq, iters=3)
+        record(rows, f"wm_levelwise_n{n}_s{sigma}", t,
+               melem_per_s=round(n / t / 1e6, 1), bytes_per_elem=4 * nbits)
+        for tau in (4, 8, 16):
+            for big in ("compose", "radix", "xla"):
+                if tau >= nbits and big != "compose":
+                    continue     # single chunk: big step never runs
+                f = jax.jit(functools.partial(build_wavelet_matrix,
+                                              sigma=sigma, tau=tau,
+                                              big_step=big))
+                t = time_fn(f, seq, iters=3)
+                record(rows, f"wm_tau{tau}_{big}_n{n}_s{sigma}", t,
+                       melem_per_s=round(n / t / 1e6, 1),
+                       bytes_per_elem=round(4 * nbits / tau + nbits, 1))
+    if out is None:
+        save(rows, "wavelet_matrix.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

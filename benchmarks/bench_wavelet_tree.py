@@ -1,0 +1,67 @@
+"""Paper Table 1, rows 1–3: binary wavelet tree construction.
+
+Compares the prior-work levelwise baseline [Shun'15] (O(n logσ) work: full
+32-bit symbols reshuffled at every level) against this paper's τ-chunked
+algorithm (narrow τ-bit short lists between big-node sorts) and the
+domain-decomposition algorithm (Theorem 4.2). The derived column
+``bytes_per_elem`` is the data-movement proxy for PRAM work on a
+bandwidth-bound machine (DESIGN.md §2): levelwise moves 4·logσ B/elem,
+τ-chunked ≈ (4·logσ/τ + 1·logσ) B/elem.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wavelet_matrix import num_levels
+from repro.core.wavelet_tree import (build_wavelet_tree,
+                                     build_wavelet_tree_dd,
+                                     build_wavelet_tree_levelwise)
+
+from .common import record, save, time_fn
+
+
+def _data(n, sigma, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).integers(0, sigma, n).astype(np.uint32))
+
+
+def run(n: int = 1 << 20, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    for sigma in (256, 65536):
+        seq = _data(n, sigma)
+        nbits = num_levels(sigma)
+
+        f = jax.jit(functools.partial(build_wavelet_tree_levelwise,
+                                      sigma=sigma))
+        t = time_fn(f, seq, iters=3)
+        record(rows, f"wt_levelwise_n{n}_s{sigma}", t,
+               melem_per_s=round(n / t / 1e6, 1),
+               bytes_per_elem=4 * nbits)
+
+        for tau in (4, 8):
+            for big in ("compose", "radix"):
+                f = jax.jit(functools.partial(build_wavelet_tree,
+                                              sigma=sigma, tau=tau,
+                                              big_step=big))
+                t = time_fn(f, seq, iters=3)
+                record(rows, f"wt_tau{tau}_{big}_n{n}_s{sigma}", t,
+                       melem_per_s=round(n / t / 1e6, 1),
+                       bytes_per_elem=round(4 * nbits / tau + nbits, 1))
+
+        for chunks in (16, 64):
+            f = jax.jit(functools.partial(build_wavelet_tree_dd,
+                                          sigma=sigma, num_chunks=chunks))
+            t = time_fn(f, seq, iters=3)
+            record(rows, f"wt_dd_P{chunks}_n{n}_s{sigma}", t,
+                   melem_per_s=round(n / t / 1e6, 1))
+    if out is None:
+        save(rows, "wavelet_tree.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

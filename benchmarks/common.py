@@ -1,0 +1,37 @@
+"""Benchmark helpers: jit-compile once, time steady-state executions."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Callable
+
+import jax
+
+RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of ``fn(*args)`` after warmup (handles jit)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def record(rows: list, name: str, seconds: float, **derived) -> dict:
+    row = {"name": name, "us_per_call": round(seconds * 1e6, 1), **derived}
+    rows.append(row)
+    flat = ",".join(f"{k}={v}" for k, v in derived.items())
+    print(f"{name},{row['us_per_call']}us,{flat}", flush=True)
+    return row
+
+
+def save(rows: list, fname: str) -> None:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    (RESULTS_DIR / fname).write_text(json.dumps(rows, indent=1))

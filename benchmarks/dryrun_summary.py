@@ -1,0 +1,37 @@
+"""Summarize results/dryrun/*.json into the §Dry-run markdown table."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def main():
+    rows = []
+    n_ok = n_skip = n_fail = 0
+    for f in sorted(DRYRUN.glob("*.json")):
+        r = json.loads(f.read_text())
+        if r.get("skipped"):
+            n_skip += 1
+            continue
+        if not r.get("ok"):
+            n_fail += 1
+            rows.append((r["arch"], r["shape"], r["mesh"], None, None, "FAIL"))
+            continue
+        n_ok += 1
+        peak = r["memory"]["peak_bytes"] / 1e9
+        coll = sum(r["collective_bytes_per_device"].values()) / 1e9
+        rows.append((r["arch"], r["shape"], r["mesh"], peak, coll, "ok"))
+    print(f"cells ok={n_ok} skip={n_skip} fail={n_fail}\n")
+    print(f"| arch | shape | mesh | peak HBM (GB) | coll (GB/step) |")
+    print("|---|---|---|---|---|")
+    for arch, shape, mesh, peak, coll, st in rows:
+        if st == "FAIL":
+            print(f"| {arch} | {shape} | {mesh} | FAIL | |")
+        else:
+            print(f"| {arch} | {shape} | {mesh} | {peak:.1f} | {coll:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

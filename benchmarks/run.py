@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``          — everything
+``PYTHONPATH=src python -m benchmarks.run --only wt`` — one suite
+
+Each suite prints ``name,us_per_call,derived`` CSV lines and persists JSON
+under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (bench_corpus_store, bench_huffman, bench_kernels,
+               bench_multiary, bench_rank_select, bench_wavelet_matrix,
+               bench_wavelet_tree)
+from .common import save
+
+SUITES = {
+    "wt": ("wavelet_tree.json", bench_wavelet_tree.run),
+    "wm": ("wavelet_matrix.json", bench_wavelet_matrix.run),
+    "huffman": ("huffman.json", bench_huffman.run),
+    "multiary": ("multiary.json", bench_multiary.run),
+    "rank_select": ("rank_select.json", bench_rank_select.run),
+    "kernels": ("kernels.json", bench_kernels.run),
+    "corpus": ("corpus_store.json", bench_corpus_store.run),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=sorted(SUITES), default=None)
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller n (CI-sized)")
+    args = ap.parse_args()
+
+    todo = {args.only: SUITES[args.only]} if args.only else SUITES
+    t0 = time.time()
+    for key, (fname, fn) in todo.items():
+        print(f"== {key} ==", flush=True)
+        kwargs = {}
+        if args.fast:
+            kwargs["n"] = 1 << 16
+        rows = fn(**kwargs)
+        save(rows, fname)
+    print(f"total {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: build the paper's structures and query them.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_wavelet_matrix, build_wavelet_tree,
+                        wm_access, wm_rank, wm_select,
+                        wt_access, wt_rank, wt_select)
+from repro.core.huffman import build_huffman_wavelet_tree, huffman_codebook
+
+
+def main():
+    rng = np.random.default_rng(0)
+    n, sigma = 100_000, 1000
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    seqj = jnp.asarray(seq)
+
+    # --- balanced wavelet tree (paper Theorem 4.1: τ-chunked parallel) ----
+    wt = build_wavelet_tree(seqj, sigma, tau=8)
+    i = 12345
+    c = int(wt_access(wt, jnp.int32(i)))
+    print(f"wavelet tree: S[{i}] = {c} (truth {seq[i]})")
+    r = int(wt_rank(wt, jnp.int32(c), jnp.int32(i)))
+    print(f"rank_{c}(S, {i}) = {r} (truth {(seq[:i] == c).sum()})")
+    s = int(wt_select(wt, jnp.int32(c), jnp.int32(r)))
+    print(f"select_{c}(S, {r}) = {s} (the occurrence at/after {i}: "
+          f"{np.flatnonzero(seq == c)[r]})")
+
+    # --- wavelet matrix (Theorem 4.5) --------------------------------------
+    wm = build_wavelet_matrix(seqj, sigma, tau=8)
+    idx = jnp.asarray([0, 1, n // 2, n - 1])
+    print("wavelet matrix access:", np.asarray(wm_access(wm, idx)),
+          "truth:", seq[[0, 1, n // 2, n - 1]])
+    top = int(np.bincount(seq).argmax())
+    print(f"count of most frequent symbol {top}:",
+          int(wm_rank(wm, jnp.int32(top), jnp.int32(n))),
+          "truth:", int((seq == top).sum()))
+    print("its 10th occurrence at:",
+          int(wm_select(wm, jnp.int32(top), jnp.int32(9))),
+          "truth:", int(np.flatnonzero(seq == top)[9]))
+
+    # --- Huffman-shaped tree (Theorem 4.3): entropy-sized storage ----------
+    zipf = rng.choice(sigma, size=n,
+                      p=(lambda p: p / p.sum())(
+                          np.arange(1, sigma + 1.) ** -1.3)).astype(np.uint32)
+    freqs = np.bincount(zipf, minlength=sigma) + 1
+    codes, lengths, max_len = huffman_codebook(freqs)
+    hwt = build_huffman_wavelet_tree(jnp.asarray(zipf), jnp.asarray(codes),
+                                     jnp.asarray(lengths), max_len)
+    print(f"huffman tree on zipf data: {int(hwt.total_bits) / n:.2f} "
+          f"bits/symbol vs {np.ceil(np.log2(sigma)):.0f} balanced")
+
+
+if __name__ == "__main__":
+    main()

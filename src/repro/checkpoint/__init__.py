@@ -1,0 +1,6 @@
+"""Fault-tolerance substrate: atomic checkpoints + elastic re-sharding."""
+from .checkpoint import (checkpoint_steps, latest_step, prune_checkpoints,
+                         restore_checkpoint, save_checkpoint)
+
+__all__ = ["checkpoint_steps", "latest_step", "prune_checkpoints",
+           "restore_checkpoint", "save_checkpoint"]

@@ -1,0 +1,150 @@
+"""Packed-word bit operations — the word-RAM substrate of the paper, on TPU.
+
+The paper stores bitmaps and short lists packed Θ(log n) bits to a word and
+manipulates them with table lookups. On TPU we fix the word to ``uint32`` and
+replace every lookup table with vector bit-arithmetic (shifts, masks,
+``lax.population_count``): TPUs have no cheap gather for small LUTs, while
+bit ops run at full VPU rate (see DESIGN.md §2).
+
+All functions are shape-static and jittable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+_U32 = jnp.uint32
+
+
+def num_words(n_bits: int) -> int:
+    """Number of uint32 words needed to hold ``n_bits`` bits."""
+    return (n_bits + WORD_BITS - 1) // WORD_BITS
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a vector of 0/1 values into uint32 words, LSB-first.
+
+    Bit ``i`` of the sequence lands in word ``i // 32`` at position ``i % 32``.
+    Input length must be padded to a multiple of 32 by the caller via
+    :func:`pad_bits` (padding bits must be 0).
+    """
+    n = bits.shape[0]
+    assert n % WORD_BITS == 0, "pad_bits first"
+    b = bits.astype(_U32).reshape(-1, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=_U32)
+    return jnp.bitwise_or.reduce(b << shifts, axis=1)
+
+
+def pad_bits(bits: jax.Array) -> jax.Array:
+    """Zero-pad a bit vector to a multiple of the word size."""
+    n = bits.shape[0]
+    pad = (-n) % WORD_BITS
+    if pad:
+        bits = jnp.concatenate([bits, jnp.zeros((pad,), bits.dtype)])
+    return bits
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def unpack_bits(words: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns the first ``n`` bits as uint8."""
+    shifts = jnp.arange(WORD_BITS, dtype=_U32)
+    bits = (words[:, None] >> shifts) & _U32(1)
+    return bits.reshape(-1)[:n].astype(jnp.uint8)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Per-element population count (the paper's rank-in-word LUT)."""
+    return jax.lax.population_count(x)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def word_prefix_popcount(words: jax.Array) -> jax.Array:
+    """Exclusive prefix sum of per-word popcounts — ranks at word boundaries.
+
+    This is the parallel version of Jacobson's first-level counting: count 1s
+    per word (LUT → popcount instruction), then prefix-sum. O(n/log n) work,
+    O(log n) depth in the PRAM accounting.
+    """
+    counts = popcount(words).astype(jnp.uint32)
+    incl = jnp.cumsum(counts, dtype=jnp.uint32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.uint32), incl[:-1]])
+
+
+def mask_below(bit_index: jax.Array) -> jax.Array:
+    """uint32 mask with bits [0, bit_index) set; bit_index in [0, 32]."""
+    bit_index = bit_index.astype(_U32)
+    # (1 << 32) overflows; handle bit_index == 32 via the all-ones special case.
+    full = jnp.uint32(0xFFFFFFFF)
+    return jnp.where(bit_index >= 32, full, (_U32(1) << bit_index) - _U32(1))
+
+
+def rank1_word(word: jax.Array, bit_index: jax.Array) -> jax.Array:
+    """Number of 1 bits strictly below ``bit_index`` within a word."""
+    return popcount(word & mask_below(bit_index))
+
+
+def select_in_word(word: jax.Array, k: jax.Array) -> jax.Array:
+    """Position of the k'th (0-based) set bit of ``word``.
+
+    The paper answers this with a half-word lookup table; on TPU we use a
+    branchless binary search over popcounts of masked prefixes — 5 popcounts
+    per query, all vectorized. Returns 32 if the word has fewer than k+1 bits.
+    """
+    word = word.astype(_U32)
+    k = k.astype(jnp.int32)
+    pos = jnp.zeros_like(k)
+    remaining = k
+    for width in (16, 8, 4, 2, 1):
+        half = (word >> pos.astype(_U32)) & mask_below(jnp.full_like(pos, width).astype(_U32))
+        cnt = popcount(half).astype(jnp.int32)
+        go_right = cnt <= remaining
+        remaining = jnp.where(go_right, remaining - cnt, remaining)
+        pos = jnp.where(go_right, pos + width, pos)
+    return pos
+
+
+@functools.partial(jax.jit, static_argnames=("width", "out_dtype_name"))
+def pack_fields(values: jax.Array, width: int, out_dtype_name: str = "uint32") -> jax.Array:
+    """Pack fixed-width integer fields into words (the paper's packed lists).
+
+    ``values`` is a vector of integers each fitting in ``width`` bits; the
+    result packs ``32 // width`` of them per uint32 word (LSB-first). width
+    must divide 32. This is the TPU analogue of the packed list storing
+    ``N·b/ log n`` words for N b-bit integers.
+    """
+    assert 32 % width == 0
+    per = 32 // width
+    n = values.shape[0]
+    pad = (-n) % per
+    if pad:
+        values = jnp.concatenate([values, jnp.zeros((pad,), values.dtype)])
+    v = values.astype(_U32).reshape(-1, per)
+    shifts = (jnp.arange(per, dtype=_U32) * _U32(width))
+    words = jnp.bitwise_or.reduce(v << shifts, axis=1)
+    return words.astype(jnp.dtype(out_dtype_name))
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n"))
+def unpack_fields(words: jax.Array, width: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack_fields`: extract n fields of ``width`` bits."""
+    assert 32 % width == 0
+    per = 32 // width
+    shifts = jnp.arange(per, dtype=_U32) * _U32(width)
+    mask = _U32((1 << width) - 1)
+    fields = (words.astype(_U32)[:, None] >> shifts) & mask
+    return fields.reshape(-1)[:n]
+
+
+def extract_bit(values: jax.Array, bit: jax.Array) -> jax.Array:
+    """Extract bit ``bit`` (0 = LSB) of each value, as uint32 in {0,1}."""
+    return (values.astype(_U32) >> bit.astype(_U32)) & _U32(1)
+
+
+def extract_field(values: jax.Array, lo_bit: jax.Array, width: int) -> jax.Array:
+    """Extract ``width`` bits starting at ``lo_bit`` from each value."""
+    mask = _U32((1 << width) - 1)
+    return (values.astype(_U32) >> lo_bit.astype(_U32)) & mask

@@ -1,0 +1,195 @@
+"""Arbitrary-shaped (Huffman) binary wavelet trees (paper Theorem 4.3).
+
+Codeword generation runs host-side (the paper likewise treats codewords as
+given input; it cites [Edwards & Vishkin] for an O(n)-work parallel Huffman).
+Construction is levelwise: an element with codeword length L contributes one
+bit at levels 0..L-1 and then leaves the sequence. The array invariant is
+
+    [ active elements, stably sorted by their top-l code bits | retired ]
+
+Each level performs a node-segmented stable partition of the active prefix
+(two segmented prefix sums + a compact segment histogram); elements whose
+code ends sink stably to the retired tail. Segments are identified
+*positionally* (boundary flags → cumsum), so no 2^depth histograms are
+needed even for very skewed trees.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bitops
+from .rank_select import BinaryRank, build_binary_rank
+from .scan import exclusive_sum, segmented_exclusive_sum
+from .sort import _invert_permutation
+
+_I32 = jnp.int32
+_U32 = jnp.uint32
+
+
+# --------------------------------------------------------------------------
+# Host-side codebook generation
+# --------------------------------------------------------------------------
+
+def huffman_code_lengths(freqs: np.ndarray) -> np.ndarray:
+    """Classic heap Huffman over symbol frequencies (host-side)."""
+    sigma = len(freqs)
+    if sigma == 1:
+        return np.ones(1, np.int32)
+    heap = [(int(f), i) for i, f in enumerate(freqs)]
+    heapq.heapify(heap)
+    parent = {}
+    next_id = sigma
+    while len(heap) > 1:
+        fa, ia = heapq.heappop(heap)
+        fb, ib = heapq.heappop(heap)
+        parent[ia] = next_id
+        parent[ib] = next_id
+        heapq.heappush(heap, (fa + fb, next_id))
+        next_id += 1
+    lengths = np.zeros(sigma, np.int32)
+    for s in range(sigma):
+        d, node = 0, s
+        while node in parent:
+            node = parent[node]
+            d += 1
+        lengths[s] = max(d, 1)
+    return lengths
+
+
+def canonical_codes(lengths: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Canonical (prefix-free, MSB-first) codes from code lengths."""
+    sigma = len(lengths)
+    max_len = int(lengths.max())
+    order = np.lexsort((np.arange(sigma), lengths))
+    codes = np.zeros(sigma, np.uint64)
+    code = 0
+    prev_len = int(lengths[order[0]])
+    for s in order:
+        L = int(lengths[s])
+        code <<= (L - prev_len)
+        codes[s] = code
+        code += 1
+        prev_len = L
+    return codes.astype(np.uint32), max_len
+
+
+def huffman_codebook(freqs: np.ndarray) -> Tuple[np.ndarray, np.ndarray, int]:
+    """(codes, lengths, max_len) for a frequency table."""
+    lengths = huffman_code_lengths(np.asarray(freqs))
+    codes, max_len = canonical_codes(lengths)
+    return codes, lengths, max_len
+
+
+# --------------------------------------------------------------------------
+# Construction
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class HuffmanWaveletTree:
+    """Levelwise arbitrary-shape wavelet tree.
+
+    ``ranks`` stacks per-level rank directories; the level-l bitmap's
+    meaningful length is ``active[l]`` bits (deeper positions are padding).
+    """
+    ranks: BinaryRank        # stacked: leaves have a leading (max_len,) axis
+    active: jax.Array        # (max_len,) int32 — bitmap length per level
+    n: int = field(metadata=dict(static=True))
+    max_len: int = field(metadata=dict(static=True))
+
+    def level(self, l: int) -> BinaryRank:
+        return jax.tree.map(lambda x: x[l], self.ranks)
+
+    @property
+    def total_bits(self) -> jax.Array:
+        """Compressed size in bits = Σ code lengths."""
+        return jnp.sum(self.active)
+
+
+def build_huffman_wavelet_tree(seq: jax.Array, codes: jax.Array,
+                               lengths: jax.Array,
+                               max_len: int) -> HuffmanWaveletTree:
+    """Theorem 4.3 construction, codewords given.
+
+    Per level: survivors (code longer than l+1 bits) are stably reordered by
+    (segment, bit) via a compact-segment histogram + segmented prefix sums;
+    everyone else retires to the tail. Total data movement is
+    O(Σ_l active_l) = O(n · avg code length) on narrow arrays.
+    """
+    n = int(seq.shape[0])
+    sidx = seq.astype(_I32)
+    elen = lengths.astype(_I32)[sidx]                       # (n,)
+    cw = (codes.astype(_U32)[sidx]
+          << (jnp.uint32(max_len) - elen.astype(_U32)))     # left-justified
+    level_words: List[jax.Array] = []
+    active_counts: List[jax.Array] = []
+
+    for l in range(max_len):
+        act = elen > l
+        bit = jnp.where(act, (cw >> _U32(max_len - 1 - l)) & _U32(1),
+                        _U32(0)).astype(_I32)
+        level_words.append(bitops.pack_bits(bitops.pad_bits(
+            bit.astype(jnp.uint8))))
+        active_counts.append(jnp.sum(act, dtype=_I32))
+        if l == max_len - 1:
+            break
+
+        # ---- reorder for level l+1 -----------------------------------
+        surv = elen > l + 1
+        # positional segments over the active prefix (node = top-l bits)
+        nid = (cw >> _U32(max_len - l)).astype(_I32) if l else \
+            jnp.zeros((n,), _I32)
+        seg_start = jnp.concatenate([
+            jnp.ones((1,), _I32),
+            ((nid[1:] != nid[:-1]) | (act[1:] != act[:-1])).astype(_I32)])
+        seg_idx = jnp.cumsum(seg_start) - 1                  # compact ids
+        # survivors: stable order by (segment, bit)
+        key = jnp.where(surv, seg_idx * 2 + bit, 2 * n)      # sentinel last
+        hist = jnp.zeros((2 * n + 1,), _I32).at[key].add(1)
+        key_start = exclusive_sum(hist)
+        s0 = segmented_exclusive_sum((surv & (bit == 0)).astype(_I32),
+                                     seg_start)
+        s1 = segmented_exclusive_sum((surv & (bit == 1)).astype(_I32),
+                                     seg_start)
+        dest = key_start[key] + jnp.where(bit == 0, s0, s1)
+        # non-survivors: stable tail
+        n_surv = jnp.sum(surv, dtype=_I32)
+        tail_rank = exclusive_sum((~surv).astype(_I32))
+        dest = jnp.where(surv, dest, n_surv + tail_rank)
+        g = _invert_permutation(dest)
+        cw, elen = cw[g], elen[g]
+
+    ranks = [build_binary_rank(w, n) for w in level_words]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ranks)
+    return HuffmanWaveletTree(ranks=stacked, active=jnp.stack(active_counts),
+                              n=n, max_len=max_len)
+
+
+# --------------------------------------------------------------------------
+# Oracle (numpy) for tests/benchmarks
+# --------------------------------------------------------------------------
+
+def reference_huffman_levels(seq: np.ndarray, codes: np.ndarray,
+                             lengths: np.ndarray,
+                             max_len: int) -> List[np.ndarray]:
+    """Pure-numpy oracle: the level bitmaps of the arbitrary-shape tree."""
+    n = len(seq)
+    elen = lengths[seq]
+    cw_lj = codes[seq].astype(np.uint64) << (max_len - elen).astype(np.uint64)
+    cur = np.arange(n)                       # active elements, level order
+    out = []
+    for l in range(max_len):
+        bits = ((cw_lj[cur] >> np.uint64(max_len - 1 - l)) & 1).astype(np.int32)
+        out.append(bits)
+        if l == max_len - 1:
+            break
+        key = cw_lj[cur] >> np.uint64(max_len - 1 - l)   # top l+1 bits
+        cur = cur[np.argsort(key, kind="stable")]
+        cur = cur[elen[cur] > l + 1]
+    return out

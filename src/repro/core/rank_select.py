@@ -1,0 +1,439 @@
+"""Parallel construction of succinct rank/select structures (paper Section 5).
+
+Binary rank follows Jacobson's two-level scheme: absolute ranks every
+``SUPERBLOCK_WORDS`` words (uint32, 3.1% of the bitmap) plus superblock-
+relative ranks every ``BLOCK_WORDS`` words (uint16, 12.5%), built with
+popcounts + prefix sums in O(n/log n) work and O(log n) depth (Theorem 5.1).
+Binary select follows Clark's sampling scheme: the *block* containing every
+``sample_rate``-th 1 (resp. 0) is stored, and a query binary-searches only
+between two consecutive samples — probing ranks *derived from the rank
+directory in O(1)* rather than a stored prefix array, so select adds just
+the sample hints (≈ 32/sample_rate bits per bit). Total directory overhead
+is ~18% of the bitmap; the structures are succinct as in the paper.
+
+The generalized (σ-ary) structures follow Section 5.2: per-chunk per-
+character cumulative counts via a prefix sum whose operator adds σ-vectors
+of counts.
+
+TPU adaptation (DESIGN.md §2): every lookup table in the paper (rank-in-word,
+select-in-word, count-symbol-in-word) is replaced with vector bit arithmetic —
+``lax.population_count``, masked popcounts, and field-compare cascades. The
+word-RAM O(1) query cost becomes O(1) vector ops per query; construction work
+remains proportional to words, not bits.
+
+All structures are frozen-dataclass pytrees: arrays are pytree leaves, sizes
+are static metadata, so they can cross ``jax.jit`` boundaries freely.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import bitops
+from .scan import exclusive_sum
+
+_U32 = jnp.uint32
+_I32 = jnp.int32
+
+# Two-level rank geometry: a superblock covers 32 words = 1024 bits ≈ log²n
+# (the paper's range size); a block covers 4 words = 128 bits (sub-range).
+SUPERBLOCK_WORDS = 32
+BLOCK_WORDS = 4
+_BLOCKS_PER_SB = SUPERBLOCK_WORDS // BLOCK_WORDS
+BLOCK_BITS = BLOCK_WORDS * bitops.WORD_BITS          # 128
+
+
+# --------------------------------------------------------------------------
+# Binary rank (Jacobson)
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class BinaryRank:
+    """Two-level rank directory over a packed bit sequence.
+
+    ``superblock[k]`` = # of 1s strictly before word ``k*SUPERBLOCK_WORDS``;
+    ``block[b]``      = # of 1s in b's superblock strictly before word
+                        ``b*BLOCK_WORDS`` (≤ 28·32 < 2^16 → uint16).
+    """
+    words: jax.Array       # (num_words,) uint32 packed bits
+    superblock: jax.Array  # (ceil(W/32),) uint32
+    block: jax.Array       # (ceil(W/4),) uint16
+    n: int = field(metadata=dict(static=True))
+
+    @property
+    def num_blocks(self) -> int:
+        return self.block.shape[0]
+
+    @property
+    def total_ones(self) -> jax.Array:
+        return rank1(self, jnp.int32(self.n))
+
+
+def build_binary_rank(words: jax.Array, n: int) -> BinaryRank:
+    """O(n/log n)-work, O(log n)-depth construction (paper Theorem 5.1).
+
+    One popcount per word, one prefix sum, one subtraction — the parallel
+    version of Jacobson's counting. ``words`` must be zero-padded past bit n.
+    """
+    prefix = bitops.word_prefix_popcount(words)                  # (W,) excl.
+    superblock = prefix[::SUPERBLOCK_WORDS]
+    blk_prefix = prefix[::BLOCK_WORDS]                           # (B,)
+    nblk = blk_prefix.shape[0]
+    sb_of_blk = jnp.arange(nblk, dtype=_I32) // _BLOCKS_PER_SB
+    block = (blk_prefix - superblock[sb_of_blk]).astype(jnp.uint16)
+    return BinaryRank(words=words, superblock=superblock, block=block, n=n)
+
+
+def _rank_at_block_fast(rs: BinaryRank, b: jax.Array) -> jax.Array:
+    """rank1 at a block boundary, b < num_blocks — two gathers, no popcount."""
+    return (rs.superblock[b // _BLOCKS_PER_SB].astype(_I32)
+            + rs.block[b].astype(_I32))
+
+
+def rank_at_block(rs: BinaryRank, b: jax.Array) -> jax.Array:
+    """# of 1 bits strictly before block b — O(1) from the directory."""
+    b = jnp.asarray(b, _I32)
+    bc = jnp.minimum(b, rs.num_blocks - 1)
+    base = _rank_at_block_fast(rs, bc)
+    # b may equal num_blocks (one-past-the-end): clamp to total by adding
+    # the popcount of the final block.
+    over = jnp.sum(bitops.popcount(_block_words(rs, bc)), axis=-1).astype(_I32)
+    return jnp.where(b > bc, base + over, base)
+
+
+def _block_words(rs: BinaryRank, b: jax.Array) -> jax.Array:
+    """Gather the BLOCK_WORDS words of block b (clipped). b: (...,)."""
+    w0 = jnp.asarray(b, _I32) * BLOCK_WORDS
+    idx = w0[..., None] + jnp.arange(BLOCK_WORDS, dtype=_I32)
+    idx = jnp.minimum(idx, rs.words.shape[0] - 1)
+    valid = (w0[..., None] + jnp.arange(BLOCK_WORDS, dtype=_I32)
+             < rs.words.shape[0])
+    return jnp.where(valid, rs.words[idx], _U32(0))
+
+
+def rank1(rs: BinaryRank, i: jax.Array) -> jax.Array:
+    """# of 1 bits in positions [0, i). Vectorized over ``i``.
+
+    superblock + block + ≤3 whole-word popcounts + 1 masked popcount —
+    the paper's two lookups realized as vector bit ops.
+    """
+    i = jnp.asarray(i, _I32)
+    w = i // bitops.WORD_BITS
+    b = w // BLOCK_WORDS
+    bc = jnp.minimum(b, rs.num_blocks - 1)
+    base = (rs.superblock[bc // _BLOCKS_PER_SB].astype(_I32)
+            + rs.block[bc].astype(_I32))
+    words4 = _block_words(rs, bc)                       # (..., 4)
+    j = jnp.arange(BLOCK_WORDS, dtype=_I32)
+    wpos = bc[..., None] * BLOCK_WORDS + j
+    off_in_word = (i - w * bitops.WORD_BITS).astype(_U32)
+    full = (wpos < w[..., None])
+    part = (wpos == w[..., None])
+    cnt = jnp.where(
+        full, bitops.popcount(words4).astype(_I32),
+        jnp.where(part,
+                  bitops.rank1_word(words4,
+                                    off_in_word[..., None]).astype(_I32),
+                  0))
+    return base + jnp.sum(cnt, axis=-1)
+
+
+def rank0(rs: BinaryRank, i: jax.Array) -> jax.Array:
+    i = jnp.asarray(i, _I32)
+    return i - rank1(rs, i)
+
+
+def access_bit(rs: BinaryRank, i: jax.Array) -> jax.Array:
+    i = jnp.asarray(i, _I32)
+    w = i // bitops.WORD_BITS
+    off = (i % bitops.WORD_BITS).astype(_U32)
+    return ((rs.words[w] >> off) & _U32(1)).astype(_I32)
+
+
+# --------------------------------------------------------------------------
+# Binary select (Clark-style sampling over the rank directory)
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class BinarySelect:
+    """Sampled select hints: ``sample[j]`` = block index containing the
+    (j·sample_rate)-th target bit. Queries search only between consecutive
+    samples, probing block-boundary ranks derived from the rank directory."""
+    sample: jax.Array       # (num_samples,) int32 block hints
+    n: int = field(metadata=dict(static=True))
+    sample_rate: int = field(metadata=dict(static=True))
+    zeros: bool = field(metadata=dict(static=True))  # select0 directory?
+
+
+def build_binary_select(words: jax.Array, n: int,
+                        sample_rate: int = 512,
+                        zeros: bool = False) -> BinarySelect:
+    """O(n/log n)-work construction (Theorem 5.1): block popcounts + one
+    prefix sum + a vectorized searchsorted per sample (the paper's "identify
+    the half-words containing every k-th 1 bit")."""
+    W = words.shape[0]
+    nblk = (W + BLOCK_WORDS - 1) // BLOCK_WORDS
+    pad = nblk * BLOCK_WORDS - W
+    wp = jnp.concatenate([words, jnp.zeros((pad,), _U32)]) if pad else words
+    ones = jnp.sum(bitops.popcount(wp.reshape(nblk, BLOCK_WORDS)),
+                   axis=1).astype(_I32)
+    if zeros:
+        valid = jnp.clip(n - jnp.arange(nblk, dtype=_I32) * BLOCK_BITS,
+                         0, BLOCK_BITS)
+        counts = valid - ones
+    else:
+        counts = ones
+    cum = jnp.concatenate([jnp.zeros((1,), _I32), jnp.cumsum(counts)])
+    # +2: any valid k has both bracketing samples (targets past the last
+    # occurrence clip to the final block → hi = nblk is a safe upper bound)
+    num_samples = n // sample_rate + 2
+    targets = jnp.arange(num_samples, dtype=_I32) * _I32(sample_rate)
+    sample = jnp.clip(jnp.searchsorted(cum, targets, side="right") - 1,
+                      0, nblk - 1).astype(_I32)
+    return BinarySelect(sample=sample, n=n, sample_rate=sample_rate,
+                        zeros=zeros)
+
+
+def _zero_rank_at_block(rs: BinaryRank, b: jax.Array) -> jax.Array:
+    b = jnp.asarray(b, _I32)
+    pos = jnp.minimum(b * BLOCK_BITS, rs.n)
+    return pos - rank_at_block(rs, b)
+
+
+def _zero_rank_at_block_fast(rs: BinaryRank, b: jax.Array) -> jax.Array:
+    pos = jnp.minimum(b * BLOCK_BITS, rs.n)
+    return pos - _rank_at_block_fast(rs, b)
+
+
+def _select_search(rs: BinaryRank, sel: BinarySelect,
+                   k: jax.Array) -> jax.Array:
+    """Largest block b in [sample[j], sample[j+1]] with rank(b) <= k.
+
+    The search invariant keeps mid < num_blocks, so every probe uses the
+    two-gather fast boundary rank (no per-probe popcounts)."""
+    k = jnp.asarray(k, _I32)
+    j = k // sel.sample_rate
+    lo = sel.sample[j]
+    hi = sel.sample[jnp.minimum(j + 1, sel.sample.shape[0] - 1)] + 1
+    hi = jnp.maximum(hi, lo + 1)
+    steps = max(1, math.ceil(math.log2(rs.num_blocks + 1)))
+    probe = _zero_rank_at_block_fast if sel.zeros else _rank_at_block_fast
+    for _ in range(steps):
+        mid = (lo + hi) // 2
+        go_right = probe(rs, mid) <= k
+        lo = jnp.where(go_right, mid, lo)
+        hi = jnp.where(go_right, hi, mid)
+        hi = jnp.maximum(hi, lo)
+    return lo
+
+
+def _select_in_block(rs: BinaryRank, b: jax.Array, cnt: jax.Array,
+                     zeros: bool) -> jax.Array:
+    """Position of the cnt-th target bit inside block b (cnt block-local)."""
+    words4 = _block_words(rs, b)                         # (..., 4)
+    if zeros:
+        words4 = ~words4                                 # padding→1s is fine:
+        # a valid query's target lies before the padding region
+    pc = bitops.popcount(words4).astype(_I32)
+    excl = jnp.cumsum(pc, axis=-1) - pc                  # (..., 4) exclusive
+    in_this = (excl <= cnt[..., None]) & \
+              (cnt[..., None] < excl + pc)
+    wsel = jnp.argmax(in_this, axis=-1)                  # word within block
+    word = jnp.take_along_axis(words4, wsel[..., None], axis=-1)[..., 0]
+    base = jnp.take_along_axis(excl, wsel[..., None], axis=-1)[..., 0]
+    within = bitops.select_in_word(word, cnt - base)
+    return (b * BLOCK_WORDS + wsel) * bitops.WORD_BITS + within
+
+
+def select1(rs: BinaryRank, sel: BinarySelect, k: jax.Array) -> jax.Array:
+    """Position of the k-th (0-based) 1 bit. Vectorized over ``k``."""
+    k = jnp.asarray(k, _I32)
+    b = _select_search(rs, sel, k)
+    return _select_in_block(rs, b, k - _rank_at_block_fast(rs, b),
+                            zeros=False)
+
+
+def select0(rs: BinaryRank, sel0: BinarySelect, k: jax.Array) -> jax.Array:
+    """Position of the k-th (0-based) 0 bit."""
+    k = jnp.asarray(k, _I32)
+    b = _select_search(rs, sel0, k)
+    return _select_in_block(rs, b, k - _zero_rank_at_block_fast(rs, b),
+                            zeros=True)
+
+
+def invert_words(words: jax.Array, n: int) -> jax.Array:
+    """~words with the padding tail (bits ≥ n) forced back to 0."""
+    inv = ~words
+    w = words.shape[0]
+    last = bitops.num_words(n) - 1
+    tail = n - last * bitops.WORD_BITS
+    idx = jnp.arange(w)
+    tail_mask = bitops.mask_below(jnp.uint32(tail))
+    inv = jnp.where(idx == last, inv & tail_mask, inv)
+    inv = jnp.where(idx > last, jnp.uint32(0), inv)
+    return inv
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class BitVector:
+    """Packed bits + rank + select1/select0 — what a wavelet node stores."""
+    rank: BinaryRank
+    sel1: BinarySelect
+    sel0: BinarySelect
+
+
+def build_bitvector(words: jax.Array, n: int,
+                    sample_rate: int = 512) -> BitVector:
+    rank = build_binary_rank(words, n)
+    sel1 = build_binary_select(words, n, sample_rate, zeros=False)
+    sel0 = build_binary_select(words, n, sample_rate, zeros=True)
+    return BitVector(rank=rank, sel1=sel1, sel0=sel0)
+
+
+def bitvector_bits(bv: BitVector) -> int:
+    """Total storage in bits (bitmap + directories)."""
+    return sum(l.size * l.dtype.itemsize * 8 for l in jax.tree.leaves(bv))
+
+
+# --------------------------------------------------------------------------
+# Generalized rank/select for small alphabets (paper Section 5.2)
+# --------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class GeneralizedRankSelect:
+    """Rank/select over a sequence of ``width``-bit symbols, σ = 2^width.
+
+    ``chunk_cum[k, c]`` = # of occurrences of symbol c strictly before chunk
+    k (chunks of ``chunk_syms`` symbols). Queries finish inside one chunk by
+    counting symbol hits with vectorized field compares on the packed words —
+    the replacement for the paper's per-(block, character) lookup tables.
+    """
+    packed: jax.Array     # (num_words,) uint32, fields of `width` bits
+    chunk_cum: jax.Array  # (num_chunks + 1, sigma) int32
+    n: int = field(metadata=dict(static=True))
+    width: int = field(metadata=dict(static=True))
+    chunk_syms: int = field(metadata=dict(static=True))
+
+    @property
+    def sigma(self) -> int:
+        return 1 << self.width
+
+
+def build_generalized(seq: jax.Array, width: int, n: int,
+                      chunk_syms: int = 128) -> GeneralizedRankSelect:
+    """O(n·width/log n + n·σ/chunk)-work construction (paper Theorem 5.2).
+
+    The paper's prefix sum with the "add two σ-count vectors" operator is a
+    cumsum over the (chunks × σ) histogram matrix.
+    """
+    assert chunk_syms % (32 // width) == 0
+    sigma = 1 << width
+    packed = bitops.pack_fields(seq, width)
+    num_chunks = (n + chunk_syms - 1) // chunk_syms
+    # pad the packed words out to whole chunks so in-chunk slices are static
+    want_words = num_chunks * (chunk_syms // (32 // width))
+    if packed.shape[0] < want_words:
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((want_words - packed.shape[0],), jnp.uint32)])
+    pad = num_chunks * chunk_syms - n
+    seq_p = jnp.concatenate([seq.astype(jnp.int32),
+                             jnp.full((pad,), sigma, jnp.int32)])
+    chunk_ids = jnp.arange(seq_p.shape[0], dtype=jnp.int32) // chunk_syms
+    flat = chunk_ids * (sigma + 1) + seq_p
+    hist = (jnp.zeros((num_chunks * (sigma + 1),), jnp.int32)
+            .at[flat].add(1).reshape(num_chunks, sigma + 1)[:, :sigma])
+    cum = jnp.concatenate([jnp.zeros((1, sigma), jnp.int32),
+                           jnp.cumsum(hist, axis=0)], axis=0)
+    return GeneralizedRankSelect(packed=packed, chunk_cum=cum, n=n,
+                                 width=width, chunk_syms=chunk_syms)
+
+
+def _count_symbol_in_words(words: jax.Array, c: jax.Array, width: int,
+                           upto_fields: jax.Array) -> jax.Array:
+    """# of fields equal to c among the first ``upto_fields`` fields.
+
+    ``words``: (..., W) uint32; counts across the trailing word axis.
+    Field-compare trick: XOR with the broadcast symbol and test each field
+    for zero — O(1) vector ops per word in place of the paper's LUT.
+    """
+    per = 32 // width
+    W = words.shape[-1]
+    shifts = jnp.arange(per, dtype=_U32) * _U32(width)
+    mask = _U32((1 << width) - 1)
+    fields = (words[..., :, None] >> shifts) & mask            # (..., W, per)
+    eq = (fields == c[..., None, None].astype(_U32))
+    pos = (jnp.arange(W, dtype=jnp.int32)[:, None] * per
+           + jnp.arange(per, dtype=jnp.int32)[None, :])        # (W, per)
+    valid = pos < upto_fields[..., None, None]
+    return jnp.sum(eq & valid, axis=(-1, -2)).astype(jnp.int32)
+
+
+def generalized_rank(g: GeneralizedRankSelect, c: jax.Array,
+                     i: jax.Array) -> jax.Array:
+    """# of occurrences of symbol c in positions [0, i). Vectorized."""
+    c = jnp.asarray(c, jnp.int32)
+    i = jnp.asarray(i, jnp.int32)
+    per = 32 // g.width
+    wpc = g.chunk_syms // per                                   # words/chunk
+    chunk = i // g.chunk_syms
+    base = g.chunk_cum[chunk, c]
+    w0 = chunk * wpc
+    win = jax.vmap(lambda s: jax.lax.dynamic_slice(g.packed, (s,), (wpc,)))(
+        jnp.atleast_1d(w0))
+    win = win.reshape(i.shape + (wpc,)) if i.ndim else win[0]
+    rem = i - chunk * g.chunk_syms
+    return base + _count_symbol_in_words(win, c, g.width,
+                                         jnp.asarray(rem, jnp.int32))
+
+
+def generalized_access(g: GeneralizedRankSelect, i: jax.Array) -> jax.Array:
+    i = jnp.asarray(i, jnp.int32)
+    per = 32 // g.width
+    w = i // per
+    off = (i % per).astype(_U32) * _U32(g.width)
+    mask = _U32((1 << g.width) - 1)
+    return ((g.packed[w] >> off) & mask).astype(jnp.int32)
+
+
+def generalized_select(g: GeneralizedRankSelect, c: jax.Array,
+                       k: jax.Array) -> jax.Array:
+    """Position of the k-th (0-based) occurrence of c. Vectorized.
+
+    Binary search over chunk_cum[:, c], then a per-symbol scan within the
+    chunk realized as a field-compare + prefix count.
+    """
+    c = jnp.asarray(c, jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    col = g.chunk_cum[:, c] if c.ndim == 0 else jnp.take_along_axis(
+        g.chunk_cum, c[None, :], axis=1).T  # (batch, chunks+1)
+    if c.ndim == 0:
+        chunk = jnp.searchsorted(col, k, side="right") - 1
+    else:
+        chunk = jax.vmap(lambda cc, kk: jnp.searchsorted(cc, kk, side="right") - 1)(col, k)
+    chunk = jnp.clip(chunk, 0, g.chunk_cum.shape[0] - 2)
+    per = 32 // g.width
+    wpc = g.chunk_syms // per
+    w0 = chunk * wpc
+    win = jax.vmap(lambda s: jax.lax.dynamic_slice(g.packed, (s,), (wpc,)))(
+        jnp.atleast_1d(w0))
+    win = win.reshape(k.shape + (wpc,)) if k.ndim else win[0]
+    # position within chunk of the (k - cum)-th occurrence of c
+    residual = k - g.chunk_cum[chunk, c] if c.ndim == 0 else \
+        k - jnp.take_along_axis(g.chunk_cum[chunk], c[:, None], axis=1)[:, 0]
+    shifts = jnp.arange(per, dtype=_U32) * _U32(g.width)
+    mask = _U32((1 << g.width) - 1)
+    fields = (win[..., :, None] >> shifts) & mask
+    eq = (fields == (c[..., None, None] if c.ndim else c).astype(_U32))
+    eqf = eq.reshape(eq.shape[:-2] + (wpc * per,)).astype(jnp.int32)
+    cum = jnp.cumsum(eqf, axis=-1)
+    # first position with cum == residual+1
+    hit = cum == (residual[..., None] if k.ndim else residual) + 1
+    pos_in_chunk = jnp.argmax(hit, axis=-1)
+    return chunk * g.chunk_syms + pos_in_chunk

@@ -1,0 +1,80 @@
+"""Prefix-sum primitives (the paper's workhorse parallel primitive).
+
+The paper uses prefix sum with custom associative operators throughout
+(Section 2: O(n) work, O(log n) depth). ``jax.lax.associative_scan`` is the
+direct TPU realization (a Blelloch-style log-depth scan tree).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def exclusive_sum(x: jax.Array, axis: int = 0, dtype=None) -> jax.Array:
+    """Exclusive prefix sum: out[i] = sum(x[:i]). Matches the paper's defn."""
+    dtype = dtype or x.dtype
+    incl = jnp.cumsum(x, axis=axis, dtype=dtype)
+    zero_shape = list(x.shape)
+    zero_shape[axis] = 1
+    zeros = jnp.zeros(zero_shape, dtype)
+    return jax.lax.concatenate([zeros, jax.lax.slice_in_dim(incl, 0, x.shape[axis] - 1, axis=axis)], axis)
+
+
+def inclusive_sum(x: jax.Array, axis: int = 0, dtype=None) -> jax.Array:
+    return jnp.cumsum(x, axis=axis, dtype=dtype or x.dtype)
+
+
+def prefix_scan(op: Callable, x, reverse: bool = False, axis: int = 0):
+    """Inclusive scan with a custom associative operator (paper Section 2)."""
+    return jax.lax.associative_scan(op, x, reverse=reverse, axis=axis)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def segment_offsets(segment_sizes: jax.Array, num_segments: int) -> jax.Array:
+    """Exclusive offsets for variable-length segments (packed-list appends)."""
+    del num_segments
+    return exclusive_sum(segment_sizes.astype(jnp.int32))
+
+
+def segmented_exclusive_sum(x: jax.Array, segment_starts: jax.Array) -> jax.Array:
+    """Segmented exclusive prefix sum.
+
+    ``segment_starts`` is a 0/1 vector marking the first element of each
+    segment. Implemented with the classic (value, flag) associative operator —
+    the same style of custom-⊕ scan the paper uses for its rank/select merge
+    steps.
+    """
+    flags = segment_starts.astype(jnp.int32)
+
+    def op(a, b):
+        va, fa = a
+        vb, fb = b
+        return jnp.where(fb, vb, va + vb), fa | fb
+
+    incl, _ = jax.lax.associative_scan(op, (x.astype(jnp.int32), flags))
+    # convert inclusive → exclusive within segments
+    return incl - x.astype(jnp.int32)
+
+
+def stable_partition_indices(flags: jax.Array) -> jax.Array:
+    """Destination index of each element under a stable 0/1 partition.
+
+    Zeros keep order and go first; ones keep order and follow. This is the
+    per-level wavelet-tree/matrix shuffle, built from two prefix sums exactly
+    as in the paper's short-list splitting.
+    Returns int32 destinations (a permutation of [0, n)).
+    """
+    flags = flags.astype(jnp.int32)
+    ones_before = exclusive_sum(flags)
+    zeros_before = jnp.arange(flags.shape[0], dtype=jnp.int32) - ones_before
+    total_zeros = flags.shape[0] - jnp.sum(flags)
+    return jnp.where(flags == 0, zeros_before, total_zeros + ones_before)
+
+
+def apply_permutation_dest(values: jax.Array, dest: jax.Array) -> jax.Array:
+    """Scatter ``values[i]`` to position ``dest[i]`` (dest is a permutation)."""
+    out = jnp.zeros_like(values)
+    return out.at[dest].set(values, mode="drop", unique_indices=True)

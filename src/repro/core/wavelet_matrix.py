@@ -1,0 +1,192 @@
+"""Wavelet matrix construction (paper Section 4, Theorem 4.5) and queries.
+
+The wavelet matrix [Claude & Navarro] stores one n-bit bitmap per level; at
+level l all symbols whose l-th highest bit is 0 move (stably) to the left and
+the rest to the right. The paper constructs it in τ-bit chunks: every τ-th
+level is produced by ONE stable integer sort keyed on the *reverse* of the
+next τ bits, and the τ−1 levels in between are derived from packed τ-bit
+"short lists".
+
+TPU realization (DESIGN.md §2): the short lists become narrow (uint8) key
+arrays; each in-between level is a stable 0/1 partition of the narrow array
+(two prefix sums); the big-level sort is either (a) the *composition* of the
+τ partition permutations applied once to the full-width symbols
+(``big_step="compose"``, paper-faithful prefix-sum-only data flow), (b) a
+direct stable counting sort on the reversed τ-bit key (``"radix"``), or
+(c) XLA's stable sort (``"xla"``). Full-width symbols move only once per τ
+levels — the τ-fold traffic saving that the paper's work bound expresses.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import bitops
+from .rank_select import (BitVector, access_bit, build_bitvector, rank0,
+                          rank1, select0, select1)
+from .scan import stable_partition_indices
+from .sort import _invert_permutation, sort_pass
+
+_U32 = jnp.uint32
+
+
+def num_levels(sigma: int) -> int:
+    return max(1, math.ceil(math.log2(max(2, sigma))))
+
+
+def reverse_bits(x: jax.Array, width: int) -> jax.Array:
+    """Reverse the low ``width`` bits of each element."""
+    x = x.astype(_U32)
+    out = jnp.zeros_like(x)
+    for i in range(width):
+        out = out | (((x >> _U32(i)) & _U32(1)) << _U32(width - 1 - i))
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class WaveletMatrix:
+    """Per-level bitvectors stacked on a leading (nbits,) axis."""
+    bitvectors: BitVector   # every leaf carries a leading (nbits,) axis
+    zeros: jax.Array        # (nbits,) int32 — zeros per level
+    n: int = field(metadata=dict(static=True))
+    nbits: int = field(metadata=dict(static=True))
+
+    def level(self, l: int) -> BitVector:
+        return jax.tree.map(lambda x: x[l], self.bitvectors)
+
+
+def _pack_level(bit: jax.Array) -> jax.Array:
+    return bitops.pack_bits(bitops.pad_bits(bit.astype(jnp.uint8)))
+
+
+def build_wavelet_matrix(seq: jax.Array, sigma: int, tau: int = 8,
+                         big_step: str = "compose",
+                         sample_rate: int = 512) -> WaveletMatrix:
+    """τ-chunked parallel construction (paper Theorem 4.5).
+
+    ``tau`` plays the paper's τ = √(log n) role; 8 (byte-aligned) is the TPU
+    sweet spot (DESIGN.md §2 assumption 4). ``big_step`` selects how the
+    every-τ-levels reshuffle of the full-width symbols is realized.
+    """
+    n = int(seq.shape[0])
+    nbits = num_levels(sigma)
+    order = seq.astype(_U32)
+    level_words: List[jax.Array] = []
+    zeros: List[jax.Array] = []
+
+    for alpha0 in range(0, nbits, tau):
+        width = min(tau, nbits - alpha0)
+        # τ-bit field starting at bit-offset alpha0 from the top.
+        fld = bitops.extract_field(order, jnp.uint32(nbits - alpha0 - width),
+                                   width)
+        sub = fld                       # narrow working array ("short list")
+        perm = None                     # composed gather permutation
+        for t in range(width):
+            bit = (sub >> _U32(width - 1 - t)) & _U32(1)
+            level_words.append(_pack_level(bit))
+            zeros.append(jnp.int32(n) - jnp.sum(bit, dtype=jnp.int32))
+            last_level = (alpha0 + t == nbits - 1)
+            if not last_level:
+                dest = stable_partition_indices(bit)
+                g = _invert_permutation(dest)
+                sub = sub[g]
+                perm = g if perm is None else perm[g]
+        if alpha0 + width < nbits:
+            if big_step == "compose":
+                order = order[perm]
+            elif big_step in ("radix", "xla"):
+                rev = reverse_bits(fld, width)
+                backend = "counting" if big_step == "radix" else "xla"
+                order, _ = sort_pass(order, rev, 1 << width, backend=backend)
+            else:
+                raise ValueError(f"unknown big_step {big_step!r}")
+
+    bvs = [build_bitvector(w, n, sample_rate) for w in level_words]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *bvs)
+    return WaveletMatrix(bitvectors=stacked, zeros=jnp.stack(zeros),
+                         n=n, nbits=nbits)
+
+
+def build_wavelet_matrix_levelwise(seq: jax.Array, sigma: int,
+                                   sample_rate: int = 512) -> WaveletMatrix:
+    """Prior-work baseline [Shun'15]: O(n·logσ) work, full-width symbols
+    permuted at every level. Kept for the benchmarks' before/after rows."""
+    n = int(seq.shape[0])
+    nbits = num_levels(sigma)
+    order = seq.astype(_U32)
+    level_words, zeros = [], []
+    for l in range(nbits):
+        bit = (order >> _U32(nbits - 1 - l)) & _U32(1)
+        level_words.append(_pack_level(bit))
+        zeros.append(jnp.int32(n) - jnp.sum(bit, dtype=jnp.int32))
+        if l < nbits - 1:
+            dest = stable_partition_indices(bit)
+            order = order[_invert_permutation(dest)]
+    bvs = [build_bitvector(w, n, sample_rate) for w in level_words]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *bvs)
+    return WaveletMatrix(bitvectors=stacked, zeros=jnp.stack(zeros),
+                         n=n, nbits=nbits)
+
+
+# --------------------------------------------------------------------------
+# Queries
+# --------------------------------------------------------------------------
+
+def wm_access(wm: WaveletMatrix, i: jax.Array) -> jax.Array:
+    """Symbol at position i. Vectorized over i; O(logσ) rank calls."""
+    i = jnp.asarray(i, jnp.int32)
+    c = jnp.zeros_like(i)
+    p = i
+    for l in range(wm.nbits):
+        bv = wm.level(l)
+        bit = access_bit(bv.rank, p)
+        c = (c << 1) | bit
+        p = jnp.where(bit == 0, rank0(bv.rank, p),
+                      wm.zeros[l] + rank1(bv.rank, p))
+    return c
+
+
+def wm_rank(wm: WaveletMatrix, c: jax.Array, i: jax.Array) -> jax.Array:
+    """# of occurrences of symbol c in [0, i). Vectorized."""
+    c = jnp.asarray(c, jnp.int32)
+    i = jnp.asarray(i, jnp.int32)
+    lo = jnp.zeros_like(i)
+    hi = i
+    for l in range(wm.nbits):
+        bv = wm.level(l)
+        bit = (c >> (wm.nbits - 1 - l)) & 1
+        lo0, hi0 = rank0(bv.rank, lo), rank0(bv.rank, hi)
+        lo1 = wm.zeros[l] + (lo - lo0)
+        hi1 = wm.zeros[l] + (hi - hi0)
+        lo = jnp.where(bit == 0, lo0, lo1)
+        hi = jnp.where(bit == 0, hi0, hi1)
+    return hi - lo
+
+
+def wm_select(wm: WaveletMatrix, c: jax.Array, k: jax.Array) -> jax.Array:
+    """Position of the k-th (0-based) occurrence of c. Vectorized.
+
+    Descend to find the start offset of c's block at the deepest level, then
+    ascend converting block-relative ranks back to positions via select.
+    """
+    c = jnp.asarray(c, jnp.int32)
+    k = jnp.asarray(k, jnp.int32)
+    lo = jnp.zeros_like(k)
+    for l in range(wm.nbits):
+        bv = wm.level(l)
+        bit = (c >> (wm.nbits - 1 - l)) & 1
+        lo0 = rank0(bv.rank, lo)
+        lo = jnp.where(bit == 0, lo0, wm.zeros[l] + (lo - lo0))
+    pos = lo + k
+    for l in range(wm.nbits - 1, -1, -1):
+        bv = wm.level(l)
+        bit = (c >> (wm.nbits - 1 - l)) & 1
+        pos = jnp.where(bit == 0,
+                        select0(bv.rank, bv.sel0, pos),
+                        select1(bv.rank, bv.sel1, pos - wm.zeros[l]))
+    return pos

@@ -1,0 +1,9 @@
+"""Data substrate: synthetic corpora, wavelet-matrix compressed store,
+deterministic batch pipeline."""
+from .compressed_store import (CompressedCorpus, build_compressed_corpus,
+                               token_histogram)
+from .pipeline import TokenBatcher, batch_offsets
+from .synthetic import make_corpus, zipf_probs
+
+__all__ = ["CompressedCorpus", "build_compressed_corpus", "token_histogram",
+           "TokenBatcher", "batch_offsets", "make_corpus", "zipf_probs"]

@@ -1,0 +1,98 @@
+"""Deterministic sharded batch pipeline.
+
+Batch addressing is a pure function of (seed, step, example index): each
+example's corpus offset comes from a counter-mode hash, so
+
+* any host can (re)serve any batch of any step with no pipeline state —
+  a restarted or replaced data host needs no replay (fault tolerance);
+* stragglers can be re-assigned examples without coordination;
+* resume-from-checkpoint restarts mid-stream exactly.
+
+Two backing stores: a raw uint32 token array, or the wavelet-matrix
+``CompressedCorpus`` (decoded on the fly via vectorized ``access``).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .compressed_store import CompressedCorpus
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer — cheap counter-mode hash (vectorized)."""
+    x = (x + np.uint64(0x9E3779B97F4A7C15))
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+def batch_offsets(step: int, batch: int, n_tokens: int, seq_len: int,
+                  seed: int = 0) -> np.ndarray:
+    """Corpus start offsets for every example of a step (stateless)."""
+    limit = n_tokens - seq_len - 1
+    assert limit > 0, "corpus shorter than one example"
+    ctr = (np.uint64(seed) << np.uint64(40)) \
+        + (np.uint64(step) << np.uint64(16)) \
+        + np.arange(batch, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        h = _mix64(ctr)
+    return (h % np.uint64(limit)).astype(np.int64)
+
+
+class TokenBatcher:
+    """Serves (B, S+1) next-token-prediction batches by step index."""
+
+    def __init__(self, tokens: Optional[np.ndarray] = None,
+                 corpus: Optional[CompressedCorpus] = None,
+                 batch: int = 8, seq_len: int = 256, seed: int = 0):
+        assert (tokens is None) != (corpus is None), \
+            "exactly one of tokens/corpus"
+        self.tokens = tokens
+        self.corpus = corpus
+        self.n = len(tokens) if tokens is not None else corpus.n
+        self.batch = batch
+        self.seq_len = seq_len
+        self.seed = seed
+        if corpus is not None:
+            self._decode = jax.jit(
+                lambda starts: jax.vmap(
+                    lambda s: corpus.decode_slice(s, seq_len + 1))(starts))
+
+    def batch_at(self, step: int) -> np.ndarray:
+        offs = batch_offsets(step, self.batch, self.n, self.seq_len,
+                             self.seed)
+        if self.tokens is not None:
+            idx = offs[:, None] + np.arange(self.seq_len + 1)[None, :]
+            return self.tokens[idx].astype(np.int32)
+        out = self._decode(jnp.asarray(offs, jnp.int32))
+        return np.asarray(out, np.int32)
+
+    def iterate(self, start_step: int = 0,
+                prefetch: int = 2) -> Iterator[np.ndarray]:
+        """Host-prefetching iterator (a daemon thread keeps ``prefetch``
+        batches ahead; the training loop never blocks on decode)."""
+        q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put(self.batch_at(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

@@ -1,0 +1,37 @@
+"""Pallas TPU kernel: pack a bit vector into uint32 words.
+
+This is the innermost hot loop of every bitmap construction in the paper
+(each wavelet level packs n bits). Layout: the wrapper (ops.py) presents the
+bits as a (32, W) int32 array — bit k of output word w lives at [k, w] — so
+the kernel reduces along the 32-sublane axis and keeps 128 words per lane
+vector, matching the VPU's (8, 128) vreg tiling. One VMEM block is
+(32, 128) int32 = 16 KiB in / (1, 128) uint32 out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _bitpack_kernel(bits_ref, words_ref):
+    bits = bits_ref[...].astype(jnp.uint32)            # (32, 128)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, bits.shape, 0)
+    words_ref[...] = jnp.sum(bits << shifts, axis=0, keepdims=True,
+                             dtype=jnp.uint32)
+
+
+def bitpack_pallas(bits_t: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """``bits_t``: (32, W) with W a multiple of 128 → (1, W) uint32 words."""
+    _, w = bits_t.shape
+    assert w % LANES == 0
+    return pl.pallas_call(
+        _bitpack_kernel,
+        grid=(w // LANES,),
+        in_specs=[pl.BlockSpec((32, LANES), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, LANES), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, w), jnp.uint32),
+        interpret=interpret,
+    )(bits_t)

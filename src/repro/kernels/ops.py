@@ -1,0 +1,83 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Each op handles padding/layout, dispatches to the kernel, and trims the
+result. ``interpret`` defaults to True off-TPU so the same call sites work
+on CPU (validation) and TPU (deployment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import bitpack as _bitpack
+from . import rank_build as _rank_build
+from . import wm_level as _wm_level
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitpack(bits: jax.Array, interpret: bool | None = None) -> jax.Array:
+    """Pack a (n,) 0/1 vector into ceil(n/32) uint32 words (LSB-first)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = bits.shape[0]
+    w = (n + 31) // 32
+    wpad = ((w + _bitpack.LANES - 1) // _bitpack.LANES) * _bitpack.LANES
+    flat = jnp.zeros((wpad * 32,), jnp.int32).at[:n].set(bits.astype(jnp.int32))
+    bits_t = flat.reshape(wpad, 32).T                     # (32, wpad)
+    words = _bitpack.bitpack_pallas(bits_t, interpret=interpret)
+    return words[0, :w]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def rank_build(words: jax.Array, n: int,
+               interpret: bool | None = None):
+    """Jacobson directory for a packed bit sequence of n bits.
+
+    Returns (superblock uint32 (ceil(W/32),), block_rel uint16 (ceil(W/4),)),
+    W = ceil(n/32) — identical contract to
+    ``repro.core.rank_select.build_binary_rank``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    w = (n + 31) // 32
+    sw = _rank_build.STEP_WORDS
+    wpad = ((w + sw - 1) // sw) * sw
+    wp = jnp.zeros((1, wpad), jnp.uint32).at[0, :words.shape[0]].set(words)
+    block_rel, superblock = _rank_build.rank_build_pallas(
+        wp, interpret=interpret)
+    nsb = (w + _rank_build.SUPERBLOCK_WORDS - 1) // _rank_build.SUPERBLOCK_WORDS
+    nblk = (w + _rank_build.BLOCK_WORDS - 1) // _rank_build.BLOCK_WORDS
+    return superblock[0, :nsb], block_rel[0, :nblk]
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "n", "interpret"))
+def wm_level_step(sub: jax.Array, shift: int, n: int,
+                  interpret: bool | None = None):
+    """One fused wavelet-matrix level on narrow keys ``sub`` (n,).
+
+    ``shift``: bit position of this level's bit inside the key.
+    Returns (dest (n,) int32 stable-partition destinations,
+             bitmap ceil(n/32) uint32, total_zeros scalar int32).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    blk = _wm_level.BLOCK
+    npad = ((n + blk - 1) // blk) * blk
+    # pad with all-ones keys: they partition past n and are trimmed
+    pad_val = jnp.uint32(1) << jnp.uint32(shift)
+    sp = jnp.full((1, npad), pad_val, jnp.uint32).at[0, :n].set(
+        sub.astype(jnp.uint32))
+    zeros_per_block = _wm_level.wm_counts_pallas(sp, shift,
+                                                 interpret=interpret)
+    zexcl = (jnp.cumsum(zeros_per_block, axis=1) - zeros_per_block)
+    total = jnp.sum(zeros_per_block, dtype=jnp.int32).reshape(1, 1)
+    dest, bitmap = _wm_level.wm_apply_pallas(sp, zexcl, total, shift, n,
+                                             interpret=interpret)
+    wreal = (n + 31) // 32
+    return dest[0, :n], bitmap[0, :wreal], total[0, 0]

@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: fused Jacobson rank-directory construction.
+
+Builds both levels of the paper's Section 5.1 rank structure in a single
+pass over the packed words: per-word popcounts, the block-relative ranks
+(uint16, one per BLOCK_WORDS=4 words) and the absolute superblock ranks
+(uint32, one per SUPERBLOCK_WORDS=32 words). The running total is carried
+across the sequential TPU grid in SMEM — the kernel-level analogue of the
+paper's prefix sum, exploiting that the TPU grid executes in order.
+
+Block geometry: 512 words (= 16 superblocks) per grid step; VMEM footprint
+512×4 B in + 128×2 B + 16×4 B out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SUPERBLOCK_WORDS = 32     # must match repro.core.rank_select
+BLOCK_WORDS = 4           # must match repro.core.rank_select
+STEP_WORDS = 512
+_SB_PER_STEP = STEP_WORDS // SUPERBLOCK_WORDS      # 16
+_BLK_PER_STEP = STEP_WORDS // BLOCK_WORDS          # 128
+_BLK_PER_SB = SUPERBLOCK_WORDS // BLOCK_WORDS      # 8
+
+
+def _rank_build_kernel(words_ref, block_ref, super_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0, 0] = jnp.uint32(0)
+
+    carry = carry_ref[0, 0]
+    words = words_ref[...]                                   # (1, 512)
+    counts = jax.lax.population_count(words).astype(jnp.uint32)
+    local_excl = jnp.cumsum(counts, axis=1, dtype=jnp.uint32) - counts
+    prefix = local_excl + carry                              # absolute ranks
+    sb = prefix[:, ::SUPERBLOCK_WORDS]                       # (1, 16)
+    super_ref[...] = sb
+    blk = prefix[:, ::BLOCK_WORDS]                           # (1, 128)
+    sb_broadcast = jnp.repeat(sb, _BLK_PER_SB, axis=1)       # (1, 128)
+    block_ref[...] = (blk - sb_broadcast).astype(jnp.uint16)
+    carry_ref[0, 0] = carry + jnp.sum(counts, dtype=jnp.uint32)
+
+
+def rank_build_pallas(words: jax.Array, *, interpret: bool = False):
+    """``words``: (1, W) uint32, W a multiple of STEP_WORDS.
+
+    Returns (block_rel (1, W/4) uint16, superblock (1, W/32) uint32).
+    """
+    _, w = words.shape
+    assert w % STEP_WORDS == 0
+    grid = (w // STEP_WORDS,)
+    return pl.pallas_call(
+        _rank_build_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, STEP_WORDS), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, _BLK_PER_STEP), lambda i: (0, i)),
+            pl.BlockSpec((1, _SB_PER_STEP), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, w // BLOCK_WORDS), jnp.uint16),
+            jax.ShapeDtypeStruct((1, w // SUPERBLOCK_WORDS), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.uint32)],
+        interpret=interpret,
+    )(words)

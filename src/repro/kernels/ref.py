@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (exact integer semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitops
+from repro.core.rank_select import BLOCK_WORDS, SUPERBLOCK_WORDS
+from repro.core.scan import stable_partition_indices
+
+
+def bitpack_ref(bits: jax.Array) -> jax.Array:
+    """(n,) 0/1 → ceil(n/32) uint32 words, LSB-first."""
+    return bitops.pack_bits(bitops.pad_bits(bits.astype(jnp.uint8)))
+
+
+def rank_build_ref(words: jax.Array, n: int):
+    """(superblock uint32, block_rel uint16) for a packed bit sequence.
+
+    Same two-level geometry as ``core.rank_select.build_binary_rank``."""
+    w = (n + 31) // 32
+    words = words[:w]
+    prefix = bitops.word_prefix_popcount(words)
+    superblock = prefix[::SUPERBLOCK_WORDS]
+    blk_prefix = prefix[::BLOCK_WORDS]
+    nblk = blk_prefix.shape[0]
+    sb_of_blk = jnp.arange(nblk, dtype=jnp.int32) // (SUPERBLOCK_WORDS
+                                                      // BLOCK_WORDS)
+    block = (blk_prefix - superblock[sb_of_blk]).astype(jnp.uint16)
+    return superblock, block
+
+
+def wm_level_step_ref(sub: jax.Array, shift: int, n: int):
+    """(dest, bitmap, total_zeros) for one wavelet-matrix level."""
+    sub = sub[:n].astype(jnp.uint32)
+    bit = (sub >> jnp.uint32(shift)) & jnp.uint32(1)
+    dest = stable_partition_indices(bit)
+    bitmap = bitops.pack_bits(bitops.pad_bits(bit.astype(jnp.uint8)))
+    total_zeros = jnp.int32(n) - jnp.sum(bit, dtype=jnp.int32)
+    return dest, bitmap, total_zeros

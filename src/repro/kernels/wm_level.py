@@ -1,0 +1,104 @@
+"""Pallas TPU kernels: one fused wavelet-matrix level step.
+
+A wavelet-matrix level does three things with the narrow (τ-bit) keys:
+extract the level's bit, emit the packed bitmap, and compute the stable
+0/1-partition destination of every element. The destination of a one needs
+the *global* zero count, so the step is two sequential-grid passes (the
+classic two-phase scan):
+
+  phase 1 (``wm_counts_pallas``)  — per-block zero counts;
+  phase 2 (``wm_apply_pallas``)   — given the exclusive block offsets and
+       the total, emit destinations and the packed bitmap in one pass.
+       ``ones_before(block) = block_start − zeros_before(block)``, so only
+       the zero offsets travel between phases.
+
+Padding convention: the wrapper pads keys so that padded elements read as
+ones; their destinations land past n and are trimmed, while bitmap bits at
+padded positions are masked to 0 (rank directories require zero padding).
+
+Block geometry: 1024 keys/grid step; VMEM ≈ 1024×4 B keys + 1024×4 B dest
++ 32×4 B bitmap words.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+_WPB = BLOCK // 32      # bitmap words per block
+
+
+def _counts_kernel(sub_ref, cnt_ref, *, shift):
+    bit = (sub_ref[...] >> jnp.uint32(shift)) & jnp.uint32(1)
+    cnt_ref[0, 0] = (jnp.int32(BLOCK)
+                     - jnp.sum(bit, dtype=jnp.int32))
+
+
+def wm_counts_pallas(sub: jax.Array, shift: int, *,
+                     interpret: bool = False) -> jax.Array:
+    """``sub``: (1, N) uint32 keys, N multiple of BLOCK → (1, N/BLOCK) zeros."""
+    _, n = sub.shape
+    assert n % BLOCK == 0
+    nblocks = n // BLOCK
+    return pl.pallas_call(
+        functools.partial(_counts_kernel, shift=shift),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nblocks), jnp.int32),
+        interpret=interpret,
+    )(sub)
+
+
+def _apply_kernel(sub_ref, zexcl_ref, total_ref, dest_ref, bm_ref,
+                  *, shift, n_valid):
+    i = pl.program_id(0)
+    sub = sub_ref[...]                                      # (1, BLOCK)
+    bit = ((sub >> jnp.uint32(shift)) & jnp.uint32(1)).astype(jnp.int32)
+    idx_local = jax.lax.broadcasted_iota(jnp.int32, bit.shape, 1)
+    zeros_local_excl = jnp.cumsum(1 - bit, axis=1) - (1 - bit)
+    ones_local_excl = idx_local - zeros_local_excl
+    zeros_before = zexcl_ref[0, 0]
+    ones_before = i * BLOCK - zeros_before
+    total_zeros = total_ref[0, 0]
+    dest = jnp.where(bit == 0,
+                     zeros_before + zeros_local_excl,
+                     total_zeros + ones_before + ones_local_excl)
+    dest_ref[...] = dest
+    # packed bitmap with padding masked to zero
+    gidx = i * BLOCK + idx_local
+    bm_bit = jnp.where(gidx < n_valid, bit, 0).astype(jnp.uint32)
+    b2 = bm_bit.reshape(_WPB, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, b2.shape, 1)
+    bm_ref[...] = jnp.sum(b2 << shifts, axis=1, dtype=jnp.uint32
+                          ).reshape(1, _WPB)
+
+
+def wm_apply_pallas(sub: jax.Array, zeros_excl: jax.Array,
+                    total_zeros: jax.Array, shift: int, n_valid: int, *,
+                    interpret: bool = False):
+    """Phase 2. Returns (dest (1, N) int32, bitmap (1, N/32) uint32)."""
+    _, n = sub.shape
+    assert n % BLOCK == 0
+    nblocks = n // BLOCK
+    return pl.pallas_call(
+        functools.partial(_apply_kernel, shift=shift, n_valid=n_valid),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, _WPB), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n // 32), jnp.uint32),
+        ],
+        interpret=interpret,
+    )(sub, zeros_excl, total_zeros)

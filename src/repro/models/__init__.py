@@ -1,0 +1,2 @@
+"""Model zoo: dense GQA / MoE / SSD / hybrid / enc-dec / VLM backbones."""
+from .model import Model, build_model  # noqa: F401

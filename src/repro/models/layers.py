@@ -1,0 +1,215 @@
+"""Shared transformer layers: norms, RoPE, GQA attention, MLPs.
+
+Everything is a pure function over explicit parameter pytrees (no module
+framework): params are dicts of arrays, shapes documented per function.
+Attention supports three modes: full (training), query-chunked online-softmax
+(long prefill, bounded memory), and single-token decode against a KV cache.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DP_AXES = ("pod", "data")      # batch axes (pod absent on single-pod meshes)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(x.dtype) * scale
+
+
+def rope_frequencies(head_dim: int, theta: float, positions: jax.Array):
+    """(..., head_dim/2) cos/sin tables for the given positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                      dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., seq, heads, head_dim); cos/sin: (..., seq, head_dim/2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    cos = cos[..., None, :]
+    sin = sin[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def _repeat_kv(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KV, hd) → (B, S, KV*groups, hd) for GQA."""
+    if groups == 1:
+        return k
+    b, s, kv, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :],
+                            (b, s, kv, groups, hd)).reshape(b, s, kv * groups, hd)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Sk, H, hd) — plain softmax attention."""
+    hd = q.shape[-1]
+    # bf16 matmul + f32 cast AFTER (not preferred_element_type): keeps the
+    # backward cotangents of q/k bf16 — a preferred=f32 einsum transposes
+    # to f32 gradients that infect the whole backward stream (§Perf iter 1).
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(hd)
+    if causal:
+        sq, sk = q.shape[1], k.shape[1]
+        # additive 2D bias (not a 5D select mask): stays a loop-invariant
+        # (Sq, Sk) f32 instead of a hoisted (chunks, B, H, Sq, Sk) pred
+        bias = jnp.where(jnp.arange(sk)[None, :]
+                         <= (jnp.arange(sq)[:, None] + (sk - sq)),
+                         0.0, -1e30).astype(jnp.float32)
+        scores = scores + bias[None, None]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_chunk: int = 1024, causal: bool = True) -> jax.Array:
+    """Online-softmax attention, scanned over query chunks.
+
+    Bounds activation memory to O(q_chunk · Sk) per head instead of
+    O(Sq · Sk) — required for the 32k-prefill shapes. Matches
+    full_attention bit-for-bit up to fp accumulation order.
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    assert sq % q_chunk == 0
+    nchunks = sq // q_chunk
+    qs = q.reshape(b, nchunks, q_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    kpos = jnp.arange(sk)
+
+    def chunk_out(qc, ci):
+        qpos = ci * q_chunk + jnp.arange(q_chunk) + (sk - sq)
+        scores = (jnp.einsum("bqhd,bkhd->bhqk", qc, k).astype(jnp.float32)
+                  / math.sqrt(hd))
+        if causal:
+            bias = jnp.where(kpos[None, :] <= qpos[:, None],
+                             0.0, -1e30).astype(jnp.float32)
+            scores = scores + bias[None, None]
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    # remat each chunk: the (q_chunk × Sk) score matrix is recomputed in the
+    # backward pass instead of being stacked across the chunk scan — this is
+    # what bounds attention memory to one chunk (EXPERIMENTS §Perf iter 1).
+    chunk_out = jax.checkpoint(chunk_out)
+
+    def body(carry, inp):
+        qc, ci = inp
+        return carry, chunk_out(qc, ci)
+
+    _, outs = jax.lax.scan(body, None,
+                           (qs, jnp.arange(nchunks)))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length_mask: jax.Array) -> jax.Array:
+    """Single-position attention: q (B, 1, H, hd) vs cache (B, S, H, hd).
+
+    ``length_mask``: (B, S) bool — True for valid cache slots. The score
+    reduction runs over the (possibly sequence-sharded) cache axis, so
+    GSPMD lowers it to partial reductions + a small all-reduce instead of
+    gathering the cache (see EXPERIMENTS §Perf).
+    """
+    hd = q.shape[-1]
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q, k_cache)
+              .astype(jnp.float32) / math.sqrt(hd))
+    scores = jnp.where(length_mask[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v_cache)
+
+
+def gqa_attention_train(x: jax.Array, p: dict, cfg, positions: jax.Array,
+                        q_chunk: Optional[int] = None) -> jax.Array:
+    """Full-sequence GQA attention. x: (B, S, D)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    cos, sin = rope_frequencies(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    if q_chunk is not None and s > q_chunk:
+        o = chunked_attention(q, k, v, q_chunk=q_chunk)
+    else:
+        o = full_attention(q, k, v)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def gqa_attention_decode(x: jax.Array, p: dict, cfg, cache_k, cache_v,
+                         pos: jax.Array):
+    """One-token decode. x: (B, 1, D); cache: (B, S_max, KV, hd).
+
+    Returns (out (B, 1, D), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    posb = jnp.broadcast_to(pos.reshape(-1, 1), (b, 1))
+    cos, sin = rope_frequencies(hd, cfg.rope_theta, posb)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos[0], axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos[0], axis=1)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    kk = _repeat_kv(cache_k, groups)
+    vv = _repeat_kv(cache_v, groups)
+    smax = cache_k.shape[1]
+    length_mask = jnp.arange(smax)[None, :] <= pos.reshape(-1, 1)
+    o = decode_attention(q, kk, vv, length_mask)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"]), cache_k, cache_v
+
+
+def cross_attention(x: jax.Array, memory: jax.Array, p: dict,
+                    cfg) -> jax.Array:
+    """Cross-attention over a fixed memory (encoder states / image tokens)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+    groups = cfg.num_heads // cfg.num_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    o = full_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def swiglu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    from .shard_ctx import constrain
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    # pin the hidden f-sharding so the w2 matmul partial-sums (one small
+    # activation all-reduce) instead of gathering the w2 shard
+    h = constrain(h, "dp", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])
+
+
+def gelu_mlp(x: jax.Array, p: dict) -> jax.Array:
+    from .shard_ctx import constrain
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w1"]))
+    h = constrain(h, "dp", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])

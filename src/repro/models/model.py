@@ -1,0 +1,746 @@
+"""Model assembly: params, shardings, and train/prefill/decode step functions.
+
+All families share one structure: token embedding → ``lax.scan`` over a
+stack of identical *blocks* (the smallest repeating layer pattern, so HLO
+size is independent of depth) → final norm → LM head. Per-block params are
+stacked on a leading (num_blocks,) axis; blocks are rematerialized
+(``jax.checkpoint``) during training.
+
+Families:
+  dense   — [GQA attn, MLP]                        (granite/deepseek/internlm2/qwen2)
+  moe     — [GQA attn, MoE(+dense residual)]       (arctic/dbrx)
+  ssm     — [Mamba-2 SSD]                          (mamba2)
+  hybrid  — period-8 block: attn at slot 3, Mamba elsewhere; MoE FF on odd
+            slots, dense FF on even                 (jamba)
+  encdec  — encoder [attn, MLP] + decoder [self, cross, MLP]   (whisper)
+  vlm     — period-5 block: 4 self layers + 1 image-cross layer (llama-vision)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .shard_ctx import constrain
+from .moe import moe_layer, moe_param_shapes
+from .ssm import CONV_K, mamba2_block, mamba2_decode, mamba2_param_shapes
+
+Params = Dict[str, Any]
+
+ACT_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.bfloat16
+
+
+def _norm(x, scale, cfg):
+    if cfg.norm_type == "layer":
+        mu = jnp.mean(x.astype(jnp.float32), axis=-1, keepdims=True)
+        var = jnp.var(x.astype(jnp.float32), axis=-1, keepdims=True)
+        return ((x.astype(jnp.float32) - mu)
+                * jax.lax.rsqrt(var + cfg.norm_eps)).astype(x.dtype) * scale
+    return L.rms_norm(x, scale, cfg.norm_eps)
+
+
+def _mlp(x, p, cfg):
+    if cfg.activation == "gelu":
+        return L.gelu_mlp(x, p)
+    return L.swiglu_mlp(x, p)
+
+
+# ==========================================================================
+# Parameter shapes
+# ==========================================================================
+
+def _attn_shapes(cfg) -> Dict[str, tuple]:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    s = {"wq": (d, h, hd), "wk": (d, kv, hd), "wv": (d, kv, hd),
+         "wo": (h, hd, d)}
+    if cfg.qkv_bias:
+        s.update({"bq": (h, hd), "bk": (kv, hd), "bv": (kv, hd)})
+    return s
+
+
+def _mlp_shapes(cfg, d_ff=None) -> Dict[str, tuple]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    if cfg.activation == "gelu":
+        return {"w1": (d, f), "w2": (f, d)}
+    return {"w1": (d, f), "w3": (d, f), "w2": (f, d)}
+
+
+def _block_shapes(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.family in ("dense",):
+        return {"ln1": (d,), "attn": _attn_shapes(cfg),
+                "ln2": (d,), "mlp": _mlp_shapes(cfg)}
+    if cfg.family == "moe":
+        return {"ln1": (d,), "attn": _attn_shapes(cfg),
+                "ln2": (d,), "moe": moe_param_shapes(cfg, cfg.d_ff_moe)}
+    if cfg.family == "ssm":
+        return {"ln1": (d,), "mamba": mamba2_param_shapes(cfg)}
+    if cfg.family == "hybrid":
+        per = cfg.period
+        n_mamba = per - 1
+        n_moe = per // cfg.moe_every
+        n_dense = per - n_moe
+        return {
+            "ln_mix": (per, d),
+            "ln_ff": (per, d),
+            "attn": _attn_shapes(cfg),
+            "mamba": _stack_shapes(mamba2_param_shapes(cfg), n_mamba),
+            "moe": _stack_shapes(moe_param_shapes(cfg, cfg.d_ff_moe), n_moe),
+            "mlp": _stack_shapes(_mlp_shapes(cfg), n_dense),
+        }
+    if cfg.family == "encdec":
+        return {"ln1": (d,), "self_attn": _attn_shapes(cfg),
+                "ln2": (d,), "cross_attn": _attn_shapes(cfg),
+                "ln3": (d,), "mlp": _mlp_shapes(cfg)}
+    if cfg.family == "vlm":
+        n_self = cfg.period - 1
+        return {
+            "self": _stack_shapes({"ln1": (d,), "attn": _attn_shapes(cfg),
+                                   "ln2": (d,), "mlp": _mlp_shapes(cfg)},
+                                  n_self),
+            "cross": {"ln1": (d,), "attn": _attn_shapes(cfg),
+                      "ln2": (d,), "mlp": _mlp_shapes(cfg),
+                      "gate_attn": (), "gate_mlp": ()},
+        }
+    raise ValueError(cfg.family)
+
+
+def _stack_shapes(tree, n: int):
+    return jax.tree.map(lambda s: (n,) + tuple(s), tree,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _enc_block_shapes(cfg) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {"ln1": (d,), "attn": _attn_shapes(cfg),
+            "ln2": (d,), "mlp": _mlp_shapes(cfg)}
+
+
+def param_shapes(cfg) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.padded_vocab
+    shapes: Dict[str, Any] = {
+        "embed": (v, d),
+        "final_norm": (d,),
+        "lm_head": (d, v),
+        "blocks": _stack_shapes(_block_shapes(cfg), cfg.num_blocks),
+    }
+    if cfg.family == "encdec":
+        shapes["enc_blocks"] = _stack_shapes(_enc_block_shapes(cfg),
+                                             cfg.encoder_layers)
+        shapes["enc_pos"] = (cfg.encoder_frames, d)
+        shapes["enc_final_norm"] = (d,)
+    return shapes
+
+
+def abstract_params(cfg) -> Params:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(tuple(s), PARAM_DTYPE),
+        param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))
+
+
+def count_params(cfg, active_only: bool = False) -> int:
+    total = 0
+    for path, shp in jax.tree_util.tree_flatten_with_path(
+            param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))[0]:
+        size = math.prod(shp) if shp else 1
+        if active_only and cfg.num_experts:
+            keys = [getattr(k, "key", "") for k in path]
+            if "moe" in keys and any(k in ("w1", "w2", "w3") for k in keys):
+                size = size * cfg.experts_per_token // cfg.num_experts
+        total += size
+    return total
+
+
+def count_expert_params(cfg) -> int:
+    """Parameters in MoE expert banks (2D-shardable at decode)."""
+    total = 0
+    for path, shp in jax.tree_util.tree_flatten_with_path(
+            param_shapes(cfg), is_leaf=lambda x: isinstance(x, tuple))[0]:
+        keys = [getattr(k, "key", "") for k in path]
+        if "moe" in keys and keys[-1] in ("w1", "w2", "w3"):
+            total += math.prod(shp)
+    return total
+
+
+def init_params(cfg, seed: int = 0) -> Params:
+    """Materialized init (smoke tests / examples — small configs only)."""
+    shapes = param_shapes(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    flat_paths = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda x: isinstance(x, tuple))[0]
+
+    def init_one(key, path_shape):
+        path, shp = path_shape
+        name = getattr(path[-1], "key", "")
+        shp = tuple(shp)
+        if name.startswith(("ln", "out_norm")) or "norm" in name or \
+                name in ("D_skip",):
+            return jnp.ones(shp, PARAM_DTYPE)
+        if name in ("dt_bias",):
+            return jnp.full(shp, -4.6, PARAM_DTYPE)
+        if name in ("A_log",):
+            return jnp.log(jnp.linspace(1.0, 8.0, shp[-1], dtype=jnp.float32)
+                           ).astype(PARAM_DTYPE) * jnp.ones(shp, PARAM_DTYPE)
+        if name.startswith(("b", "gate")):
+            return jnp.zeros(shp, PARAM_DTYPE)
+        # fan-in per leaf: attention weights are 3D — (d, h, hd) projects
+        # from d (NOT shp[-2], which would be the head count), and
+        # wo (h, hd, d) projects from h·hd.
+        if name in ("wq", "wk", "wv"):
+            fan_in = shp[-3]
+        elif name == "wo":
+            fan_in = shp[-3] * shp[-2]
+        elif len(shp) >= 2:
+            fan_in = shp[-2]
+        else:
+            fan_in = max(1, shp[-1] if shp else 1)
+        # unit-scale embeddings: keeps the layer-1 pre-norm Jacobian O(1)
+        # (a 0.02-scale embedding puts 1/rms ≈ 50× into the first RMSNorm
+        # backward, which explodes the embed gradient with depth and stalls
+        # Adam after global clipping).
+        scale = 1.0 if name in ("embed",) else 1.0 / math.sqrt(fan_in)
+        # GPT-2-style depth scaling on residual-out projections keeps the
+        # stream variance ~constant with depth.
+        if name in ("wo", "w2", "out_proj"):
+            scale /= math.sqrt(2.0 * max(1, cfg.num_layers))
+        return (jax.random.normal(key, shp, jnp.float32) * scale
+                ).astype(PARAM_DTYPE)
+
+    inits = [init_one(k, ps) for k, ps in zip(keys, flat_paths)]
+    return jax.tree_util.tree_unflatten(treedef, inits)
+
+
+# ==========================================================================
+# Sharding rules
+# ==========================================================================
+
+# spec for the TRAILING dims of each named leaf; leading stack axes get None
+_PARAM_RULES = {
+    "embed": P("model", "data"),
+    "lm_head": P("data", "model"),
+    "enc_pos": P(None, None),
+    "wq": P("data", "model", None),
+    "wk": P("data", "model", None),
+    "wv": P("data", "model", None),
+    "wo": P("model", None, "data"),
+    "bq": P("model", None),
+    "bk": P("model", None),
+    "bv": P("model", None),
+    "w1": P("data", "model"),
+    "w3": P("data", "model"),
+    "w2": P("model", "data"),
+    "router": P("data", None),
+    "in_proj": P("data", "model"),
+    "out_proj": P("model", "data"),
+    "conv_w": P(None, "model"),
+    "dt_bias": P("model"),
+    "A_log": P("model"),
+    "D_skip": P("model"),
+    "out_norm": P("model"),
+}
+
+# Expert banks are 2D-sharded on (experts × ff) — never on the contraction
+# dim. Contraction-dim (FSDP) sharding forces a full weight all-gather per
+# layer per microbatch under grad accumulation (measured 8.9 GB/layer on
+# arctic; §Perf iteration 5); ff-dim sharding costs only small activation
+# reshards around the grouped einsums.
+_MOE_RULES = {
+    "w1": P("model", None, "data"),
+    "w3": P("model", None, "data"),
+    "w2": P("model", None, "data"),
+}
+
+# Decode-mode rules (§Perf iteration 3): weights sharded on NON-contracting
+# dims only (Megatron TP), so a token step never all-gathers weight shards —
+# FSDP's contraction-dim sharding amortizes over 10^6 train tokens but costs
+# a full weight gather per decode step. MoE experts keep 2D (model × data)
+# sharding via the f dimension so giant expert banks still fit.
+_PARAM_RULES_DECODE = {
+    "embed": P("model", None),
+    "lm_head": P(None, "model"),
+    "enc_pos": P(None, None),
+    "wq": P(None, "model", None),
+    "wk": P(None, "model", None),
+    "wv": P(None, "model", None),
+    "wo": P("model", None, None),
+    "bq": P("model", None),
+    "bk": P("model", None),
+    "bv": P("model", None),
+    "w1": P(None, "model"),
+    "w3": P(None, "model"),
+    "w2": P("model", None),
+    "router": P(None, None),
+    "in_proj": P(None, "model"),
+    "out_proj": P("model", None),
+    "conv_w": P(None, "model"),
+    "dt_bias": P("model"),
+    "A_log": P("model"),
+    "D_skip": P("model"),
+    "out_norm": P("model"),
+}
+
+_MOE_RULES_DECODE = {
+    "w1": P("model", None, "data"),
+    "w3": P("model", None, "data"),
+    # w2 sharded on its OUTPUT dim (d over data), contraction f unsharded:
+    # the reshard XLA must insert is then a ~1 MB h-gather, not a 1 GB
+    # w2-gather (SPMD picks gather over partial-sum on mismatched f).
+    "w2": P("model", None, "data"),
+}
+
+# TP-only dense shards above this per-device size keep the train-mode FSDP
+# rules at decode (capacity over collective cost): llama-3.2-vision's 90B
+# dense params would be 11.25 GB/device on a 16-way model axis, and
+# arctic's 56 attention heads (indivisible by 16) would replicate 8.2 GB
+# of attention weights. With the global-dispatch MoE (§Perf iter 5), FSDP
+# decode sharding costs arctic only 0.32 GB/step of collectives anyway.
+_DECODE_TP_BUDGET_BYTES = 4e9
+
+
+def fit_spec(spec: P, shape, axis_sizes: Optional[Dict[str, int]]) -> P:
+    """Drop sharded axes that do not divide the dimension evenly.
+
+    GSPMD in/out shardings require exact divisibility (e.g. qwen2's kv=2
+    cannot shard over model=16; granite's odd vocab cannot shard at all);
+    the undivisible dims fall back to replication.
+    """
+    if axis_sizes is None:
+        return spec
+    new = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            new.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = math.prod(axis_sizes.get(a, 1) for a in axes)
+        new.append(ax if (size > 0 and dim % size == 0) else None)
+    return P(*new)
+
+
+def param_specs(cfg, axis_sizes: Optional[Dict[str, int]] = None,
+                mode: str = "train") -> Params:
+    """PartitionSpec pytree matching param_shapes(cfg).
+
+    ``axis_sizes`` (e.g. {"data": 16, "model": 16}) enables shape-aware
+    fitting; without it the raw logical rules are returned. ``mode``:
+    "train" = FSDP×TP (contraction dims sharded over data — weight gathers
+    amortize over the batch); "decode" = TP-only (no per-step weight
+    gathers; falls back to train rules when the TP shard would not fit).
+    """
+    shapes = param_shapes(cfg)
+    decode = mode == "decode"
+    if decode and axis_sizes:
+        tp = axis_sizes.get("model", 1)
+        dp = axis_sizes.get("data", 1)
+        # expert banks stay 2D-sharded (model × data) in decode mode;
+        # only the dense remainder is TP-only. Gate on the actual
+        # per-device footprint the decode rules would produce.
+        n_moe = count_expert_params(cfg)
+        n_dense = count_params(cfg) - n_moe
+        per_dev = 2.0 * (n_dense / tp + n_moe / (tp * dp))
+        if per_dev > _DECODE_TP_BUDGET_BYTES:
+            decode = False      # capacity-forced FSDP (e.g. vlm-90b)
+    rules_main = _PARAM_RULES_DECODE if decode else _PARAM_RULES
+    rules_moe = _MOE_RULES_DECODE if decode else _MOE_RULES
+
+    def spec_for(path, shp):
+        keys = [getattr(k, "key", "") for k in path]
+        name = keys[-1]
+        rules = rules_moe if ("moe" in keys and name in rules_moe) \
+            else rules_main
+        base = rules.get(name)
+        if base is None:
+            return P()          # norms, gates, scalars: replicated
+        pad = len(shp) - len(base)
+        if pad < 0:             # leaf smaller than rule (e.g. degenerate)
+            return P()
+        spec = P(*((None,) * pad + tuple(base)))
+        return fit_spec(spec, shp, axis_sizes)
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_spec(dp_axes) -> P:
+    return P(dp_axes, None)
+
+
+def cache_specs(cfg, dp_axes, batch: int, seq: int,
+                axis_sizes: Optional[Dict[str, int]] = None,
+                shard_seq: bool = True) -> Any:
+    """PartitionSpec tree matching cache_shapes(cfg, batch, seq)."""
+    def spec_for(path, shp):
+        name = getattr(path[-1], "key", "")
+        if name in ("k", "v"):
+            base = (dp_axes, "model" if shard_seq else None, None, None)
+        elif name in ("xk", "xv"):
+            base = (dp_axes, None, None, None)
+        elif name == "ssm":
+            base = (dp_axes, "model", None, None)
+        elif name == "conv":
+            base = (dp_axes, None, "model")
+        else:
+            return P()
+        pad = len(shp) - len(base)
+        spec = P(*((None,) * pad + tuple(base)))
+        return fit_spec(spec, shp, axis_sizes)
+
+    shapes = cache_shapes(cfg, batch, seq)
+    return jax.tree_util.tree_map_with_path(
+        spec_for, shapes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ==========================================================================
+# Cache shapes
+# ==========================================================================
+
+def cache_shapes(cfg, batch: int, seq: int) -> Dict[str, Any]:
+    """Pytree of decode-cache shapes (tuples) for one model."""
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    nb = cfg.num_blocks
+    h, n, pdim = (cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim) \
+        if cfg.ssm_state else (0, 0, 0)
+    conv_c = cfg.ssm_inner + 2 * cfg.ssm_state if cfg.ssm_state else 0
+    if cfg.family in ("dense", "moe"):
+        return {"k": (nb, batch, seq, kv, hd), "v": (nb, batch, seq, kv, hd)}
+    if cfg.family == "ssm":
+        return {"ssm": (nb, batch, h, n, pdim),
+                "conv": (nb, batch, CONV_K - 1, conv_c)}
+    if cfg.family == "hybrid":
+        nm = cfg.period - 1
+        return {"k": (nb, batch, seq, kv, hd),
+                "v": (nb, batch, seq, kv, hd),
+                "ssm": (nb, nm, batch, h, n, pdim),
+                "conv": (nb, nm, batch, CONV_K - 1, conv_c)}
+    if cfg.family == "encdec":
+        return {"k": (nb, batch, seq, kv, hd),
+                "v": (nb, batch, seq, kv, hd),
+                "xk": (nb, batch, cfg.encoder_frames, kv, hd),
+                "xv": (nb, batch, cfg.encoder_frames, kv, hd)}
+    if cfg.family == "vlm":
+        ns = cfg.period - 1
+        return {"k": (nb, ns, batch, seq, kv, hd),
+                "v": (nb, ns, batch, seq, kv, hd),
+                "xk": (nb, batch, cfg.num_image_tokens, kv, hd),
+                "xv": (nb, batch, cfg.num_image_tokens, kv, hd)}
+    raise ValueError(cfg.family)
+
+
+def abstract_cache(cfg, batch: int, seq: int):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(tuple(s), ACT_DTYPE),
+                        cache_shapes(cfg, batch, seq),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def zero_cache(cfg, batch: int, seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(tuple(s), ACT_DTYPE),
+                        cache_shapes(cfg, batch, seq),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ==========================================================================
+# Block forward functions (training / prefill)
+# ==========================================================================
+
+def _attn_sub(x, ln, attn_p, cfg, positions, q_chunk):
+    return x + L.gqa_attention_train(_norm(x, ln, cfg), attn_p, cfg,
+                                     positions, q_chunk=q_chunk)
+
+
+def _block_train(x, bp, cfg, positions, memory, q_chunk):
+    if cfg.family in ("dense",):
+        x = _attn_sub(x, bp["ln1"], bp["attn"], cfg, positions, q_chunk)
+        return x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+    if cfg.family == "moe":
+        x = _attn_sub(x, bp["ln1"], bp["attn"], cfg, positions, q_chunk)
+        return x + moe_layer(_norm(x, bp["ln2"], cfg), bp["moe"], cfg)
+    if cfg.family == "ssm":
+        return x + mamba2_block(_norm(x, bp["ln1"], cfg), bp["mamba"], cfg)
+    if cfg.family == "hybrid":
+        mi = di = 0
+        for i in range(cfg.period):
+            h = _norm(x, bp["ln_mix"][i], cfg)
+            if i == cfg.period // 2 - 1:      # attn slot (1:7 interleave)
+                x = x + L.gqa_attention_train(h, bp["attn"], cfg, positions,
+                                              q_chunk=q_chunk)
+            else:
+                x = x + mamba2_block(
+                    h, jax.tree.map(lambda a: a[mi], bp["mamba"]), cfg)
+                mi += 1
+            hf = _norm(x, bp["ln_ff"][i], cfg)
+            if i % cfg.moe_every == 1:
+                x = x + moe_layer(
+                    hf, jax.tree.map(lambda a: a[i // cfg.moe_every],
+                                     bp["moe"]), cfg)
+            else:
+                x = x + _mlp(hf, jax.tree.map(lambda a: a[di], bp["mlp"]),
+                             cfg)
+                di += 1
+        return x
+    if cfg.family == "encdec":
+        x = _attn_sub(x, bp["ln1"], bp["self_attn"], cfg, positions, q_chunk)
+        x = x + L.cross_attention(_norm(x, bp["ln2"], cfg), memory,
+                                  bp["cross_attn"], cfg)
+        return x + _mlp(_norm(x, bp["ln3"], cfg), bp["mlp"], cfg)
+    if cfg.family == "vlm":
+        for i in range(cfg.period - 1):
+            sp = jax.tree.map(lambda a: a[i], bp["self"])
+            x = _attn_sub(x, sp["ln1"], sp["attn"], cfg, positions, q_chunk)
+            x = x + _mlp(_norm(x, sp["ln2"], cfg), sp["mlp"], cfg)
+        cp = bp["cross"]
+        x = x + jnp.tanh(cp["gate_attn"]) * L.cross_attention(
+            _norm(x, cp["ln1"], cfg), memory, cp["attn"], cfg)
+        return x + jnp.tanh(cp["gate_mlp"]) * _mlp(
+            _norm(x, cp["ln2"], cfg), cp["mlp"], cfg)
+    raise ValueError(cfg.family)
+
+
+def _encoder(params, cfg, frames):
+    """Whisper encoder over stubbed frame embeddings (B, F, D)."""
+    x = frames + params["enc_pos"][None].astype(frames.dtype)
+    positions = jnp.arange(cfg.encoder_frames)[None, :]
+
+    def body(h, bp):
+        h = h + L.gqa_attention_train(
+            _norm(h, bp["ln1"], cfg), bp["attn"], cfg, positions,
+            q_chunk=None)
+        # encoder self-attention is bidirectional
+        return h + _mlp(_norm(h, bp["ln2"], cfg), bp["mlp"], cfg), None
+
+    # NOTE: encoder attention must be non-causal; handled via flag below.
+    def body_nc(h, bp):
+        hn = _norm(h, bp["ln1"], cfg)
+        q = jnp.einsum("bsd,dhk->bshk", hn, bp["attn"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", hn, bp["attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", hn, bp["attn"]["wv"])
+        groups = cfg.num_heads // cfg.num_kv_heads
+        k = L._repeat_kv(k, groups)
+        v = L._repeat_kv(v, groups)
+        o = L.full_attention(q, k, v, causal=False)
+        h = h + jnp.einsum("bshk,hkd->bsd", o, bp["attn"]["wo"])
+        return h + _mlp(_norm(h, bp["ln2"], cfg), bp["mlp"], cfg), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body_nc), x, params["enc_blocks"])
+    return _norm(x, params["enc_final_norm"], cfg)
+
+
+def forward_train(params: Params, cfg, tokens: jax.Array,
+                  extras: Optional[Dict[str, jax.Array]] = None,
+                  q_chunk: Optional[int] = 512,
+                  logits_mode: str = "all") -> jax.Array:
+    """tokens: (B, S) → logits (B, S, V) (or (B, V) for logits_mode="last")."""
+    b, s = tokens.shape
+    x = params["embed"].astype(ACT_DTYPE)[tokens]
+    x = constrain(x, "dp", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    memory = None
+    if cfg.family == "encdec":
+        memory = _encoder(params, cfg, extras["frames"].astype(ACT_DTYPE))
+    elif cfg.family == "vlm":
+        memory = extras["image_embeds"].astype(ACT_DTYPE)
+
+    def body(h, bp):
+        h = _block_train(h, bp, cfg, positions, memory, q_chunk)
+        return constrain(h, "dp", None, None), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+    x = _norm(x, params["final_norm"], cfg)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    # bf16 matmul with an f32 cast AFTER: the cast boundary keeps the
+    # residual-stream cotangent bf16 through the whole backward scan —
+    # with preferred_element_type=f32 the f32 cotangent propagates into
+    # every layer and doubles all backward collective/memory traffic
+    # (EXPERIMENTS §Perf iteration 1).
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(ACT_DTYPE))
+    logits = constrain(logits, "dp", None, "model")
+    logits = logits.astype(jnp.float32)
+    return logits[:, 0] if logits_mode == "last" else logits
+
+
+# ==========================================================================
+# Decode (serve_step)
+# ==========================================================================
+
+def _attn_decode_sub(x, ln, attn_p, cfg, k, v, pos):
+    h = _norm(x, ln, cfg)
+    o, k, v = L.gqa_attention_decode(h, attn_p, cfg, k, v, pos)
+    return x + o, k, v
+
+
+def _block_decode(x, bp, cfg, cache_b, pos, memory_kv):
+    """One block, one token. cache_b: this block's cache slice."""
+    if cfg.family in ("dense", "moe"):
+        x, k, v = _attn_decode_sub(x, bp["ln1"], bp["attn"], cfg,
+                                   cache_b["k"], cache_b["v"], pos)
+        if cfg.family == "dense":
+            x = x + _mlp(_norm(x, bp["ln2"], cfg), bp["mlp"], cfg)
+        else:
+            x = x + moe_layer(_norm(x, bp["ln2"], cfg), bp["moe"], cfg)
+        return x, {"k": k, "v": v}
+    if cfg.family == "ssm":
+        h = _norm(x, bp["ln1"], cfg)
+        o, st, cv = mamba2_decode(h, bp["mamba"], cfg,
+                                  cache_b["ssm"], cache_b["conv"])
+        return x + o, {"ssm": st, "conv": cv}
+    if cfg.family == "hybrid":
+        new_ssm, new_conv = [], []
+        k = v = None
+        mi = di = 0
+        for i in range(cfg.period):
+            h = _norm(x, bp["ln_mix"][i], cfg)
+            if i == cfg.period // 2 - 1:
+                o, k, v = L.gqa_attention_decode(h, bp["attn"], cfg,
+                                                 cache_b["k"], cache_b["v"],
+                                                 pos)
+                x = x + o
+            else:
+                o, st, cv = mamba2_decode(
+                    h, jax.tree.map(lambda a: a[mi], bp["mamba"]), cfg,
+                    cache_b["ssm"][mi], cache_b["conv"][mi])
+                new_ssm.append(st)
+                new_conv.append(cv)
+                x = x + o
+                mi += 1
+            hf = _norm(x, bp["ln_ff"][i], cfg)
+            if i % cfg.moe_every == 1:
+                x = x + moe_layer(
+                    hf, jax.tree.map(lambda a: a[i // cfg.moe_every],
+                                     bp["moe"]), cfg)
+            else:
+                x = x + _mlp(hf, jax.tree.map(lambda a: a[di], bp["mlp"]),
+                             cfg)
+                di += 1
+        return x, {"k": k, "v": v, "ssm": jnp.stack(new_ssm),
+                   "conv": jnp.stack(new_conv)}
+    if cfg.family == "encdec":
+        x, k, v = _attn_decode_sub(x, bp["ln1"], bp["self_attn"], cfg,
+                                   cache_b["k"], cache_b["v"], pos)
+        h = _norm(x, bp["ln2"], cfg)
+        x = x + _cross_decode(h, bp["cross_attn"], cfg,
+                              cache_b["xk"], cache_b["xv"])
+        x = x + _mlp(_norm(x, bp["ln3"], cfg), bp["mlp"], cfg)
+        return x, {"k": k, "v": v, "xk": cache_b["xk"], "xv": cache_b["xv"]}
+    if cfg.family == "vlm":
+        ks, vs = [], []
+        for i in range(cfg.period - 1):
+            sp = jax.tree.map(lambda a: a[i], bp["self"])
+            x, k, v = _attn_decode_sub(x, sp["ln1"], sp["attn"], cfg,
+                                       cache_b["k"][i], cache_b["v"][i], pos)
+            x = x + _mlp(_norm(x, sp["ln2"], cfg), sp["mlp"], cfg)
+            ks.append(k)
+            vs.append(v)
+        cp = bp["cross"]
+        h = _norm(x, cp["ln1"], cfg)
+        x = x + jnp.tanh(cp["gate_attn"]) * _cross_decode(
+            h, cp["attn"], cfg, cache_b["xk"], cache_b["xv"])
+        x = x + jnp.tanh(cp["gate_mlp"]) * _mlp(
+            _norm(x, cp["ln2"], cfg), cp["mlp"], cfg)
+        return x, {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                   "xk": cache_b["xk"], "xv": cache_b["xv"]}
+    raise ValueError(cfg.family)
+
+
+def _cross_decode(x, p, cfg, xk, xv):
+    """Cross-attention against precomputed memory K/V. x: (B, 1, D)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    groups = cfg.num_heads // cfg.num_kv_heads
+    kk = L._repeat_kv(xk, groups)
+    vv = L._repeat_kv(xv, groups)
+    mask = jnp.ones((x.shape[0], xk.shape[1]), bool)
+    o = L.decode_attention(q, kk, vv, mask)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+def forward_decode(params: Params, cfg, tokens: jax.Array, cache,
+                   pos: jax.Array):
+    """tokens: (B, 1); pos: (B,) current positions (aligned batches).
+
+    Returns (logits (B, V), new_cache).
+    """
+    x = params["embed"].astype(ACT_DTYPE)[tokens]
+    x = constrain(x, "dp", None, None)
+
+    def body(h, inp):
+        bp, cb = inp
+        h, new_cb = _block_decode(h, bp, cfg, cb, pos, None)
+        return constrain(h, "dp", None, None), new_cb
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = _norm(x, params["final_norm"], cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["lm_head"].astype(ACT_DTYPE)
+                        ).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        valid = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(valid, logits, -1e30)
+    return logits[:, 0], new_cache
+
+
+# ==========================================================================
+# Model facade
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: Any
+
+    # ----- shapes / specs -----
+    def abstract_params(self):
+        return abstract_params(self.cfg)
+
+    def init(self, seed: int = 0):
+        return init_params(self.cfg, seed)
+
+    def param_specs(self):
+        return param_specs(self.cfg)
+
+    def extras_shapes(self, batch: int) -> Dict[str, tuple]:
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return {"frames": (batch, cfg.encoder_frames, cfg.d_model)}
+        if cfg.family == "vlm":
+            return {"image_embeds": (batch, cfg.num_image_tokens,
+                                     cfg.d_model)}
+        return {}
+
+    # ----- step functions -----
+    def loss_fn(self, params, tokens, extras=None, q_chunk=512):
+        """tokens: (B, S+1). Mean next-token cross-entropy."""
+        inp, labels = tokens[:, :-1], tokens[:, 1:]
+        logits = forward_train(params, self.cfg, inp, extras,
+                               q_chunk=q_chunk)
+        # vocab-padding slots never receive probability mass
+        if self.cfg.padded_vocab != self.cfg.vocab_size:
+            valid = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab_size
+            logits = jnp.where(valid, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None],
+                                   axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    def prefill(self, params, tokens, extras=None, q_chunk=512):
+        """Forward pass returning last-position logits only."""
+        logits = forward_train(params, self.cfg, tokens, extras,
+                               q_chunk=q_chunk, logits_mode="last")
+        if self.cfg.padded_vocab != self.cfg.vocab_size:
+            valid = jnp.arange(self.cfg.padded_vocab) < self.cfg.vocab_size
+            logits = jnp.where(valid, logits, -1e30)
+        return logits
+
+    def decode_step(self, params, tokens, cache, pos):
+        return forward_decode(params, self.cfg, tokens, cache, pos)
+
+
+def build_model(cfg) -> Model:
+    return Model(cfg=cfg)

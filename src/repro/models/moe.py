@@ -1,0 +1,105 @@
+"""Mixture-of-Experts layer with paper-technique token dispatch.
+
+Routing-to-slots is exactly the paper's stable-counting machinery: each
+token's rank among same-expert tokens (``core.sort.bucket_ranks`` — prefix
+sums over a one-hot expert matrix) is its capacity slot; overflowing tokens
+are dropped (standard capacity-factor semantics). Dispatch/combine are
+scatter/gather, experts run as one grouped einsum sharded over the ``model``
+axis (expert parallelism).
+
+Supports top-k routing, optional dense residual branch (arctic) and
+fine-grained expert counts (dbrx, arctic, jamba).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sort import bucket_ranks
+
+from .layers import swiglu_mlp
+from .shard_ctx import constrain
+
+
+def moe_layer(x: jax.Array, p: dict, cfg, capacity_factor: float = 1.25
+              ) -> jax.Array:
+    """x: (B, S, D) → (B, S, D).
+
+    Params: router (D, E); w1, w3 (E, D, F); w2 (E, F, D);
+    optional dense residual branch under p["dense"].
+    """
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+
+    # bf16 matmul + f32 cast after (not preferred=f32): keeps the router's
+    # dx cotangent bf16 (see layers.full_attention and §Perf iteration 1)
+    logits = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    gate_vals, gate_idx = jax.lax.top_k(logits, k)           # (B, S, k)
+    gate = jax.nn.softmax(gate_vals, axis=-1).astype(x.dtype)
+
+    # Global (GShard-style) dispatch for every shape: all B·S·k routings
+    # share one (E, cap, d) buffer. Two wins over per-example vmap
+    # dispatch: (i) expert weights never need contraction-dim (data)
+    # sharding, so FSDP weight gathers vanish — decisive once microbatch
+    # grad-accum would otherwise re-gather weights per microbatch
+    # (§Perf iterations 3–5); (ii) the capacity is pooled across the
+    # batch (standard GShard semantics).
+    out = _moe_apply_global(x.reshape(b * s, d),
+                            gate_idx.reshape(b * s * k),
+                            gate.reshape(b * s, k), p, cfg, e, k,
+                            capacity_factor).reshape(b, s, d)
+    if cfg.moe_dense_residual:
+        out = out + swiglu_mlp(x, p["dense"])
+    return out
+
+
+def _moe_apply_global(xt: jax.Array, flat_e: jax.Array, gate: jax.Array,
+                      p: dict, cfg, e: int, k: int,
+                      capacity_factor: float) -> jax.Array:
+    """Global-batch MoE for decode. xt: (T, D) tokens; flat_e: (T*k,).
+
+    One (E, cap, D) buffer for the whole step; slot assignment is the
+    paper's stable-counting primitive over all T·k routings.
+    """
+    t, d = xt.shape
+    cap = max(8, int(t * k * capacity_factor / e))
+    slot = bucket_ranks(flat_e, e)
+    keep = slot < cap
+    src = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    buf = jnp.zeros((e, cap, d), xt.dtype)
+    buf = buf.at[flat_e, jnp.minimum(slot, cap - 1)].add(
+        jnp.where(keep[:, None], xt[src], 0))
+    buf = constrain(buf, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    # pin h to the f-sharding w1 produced (f over data): the w2 matmul can
+    # then local-slice w2's unsharded f and reduce-scatter its d output —
+    # without the pin SPMD re-gathers the (large) h across data per layer
+    # per microbatch
+    h = constrain(h, "model", None, "data")
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w2"])
+    # keep eout's d sharded like w2's output dim: demanding unsharded d
+    # here makes SPMD gather the full w2 instead of resharding the (tiny)
+    # expert outputs after the matmul
+    eout = constrain(eout, "model", None, "data")
+    tok_out = eout[flat_e, jnp.minimum(slot, cap - 1)]        # (T*k, D)
+    tok_out = jnp.where(keep[:, None], tok_out, 0)
+    w = gate.reshape(t * k)[:, None].astype(tok_out.dtype)
+    return jnp.zeros((t, d), tok_out.dtype).at[src].add(tok_out * w)
+
+
+def moe_param_shapes(cfg, d_ff_moe: int | None = None) -> dict:
+    d = cfg.d_model
+    e = cfg.num_experts
+    f = d_ff_moe if d_ff_moe is not None else cfg.d_ff
+    shapes = {
+        "router": (d, e),
+        "w1": (e, d, f),
+        "w3": (e, d, f),
+        "w2": (e, f, d),
+    }
+    if cfg.moe_dense_residual:
+        shapes["dense"] = {"w1": (d, cfg.d_ff), "w3": (d, cfg.d_ff),
+                           "w2": (cfg.d_ff, d)}
+    return shapes

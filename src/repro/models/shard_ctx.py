@@ -1,0 +1,46 @@
+"""Ambient activation-sharding context.
+
+The launcher declares the mesh's data-parallel axes before tracing
+(``set_dp_axes``), and model code marks activation layouts with
+``constrain(x, "dp", None, "model")``-style hints. Hints are no-ops when no
+mesh context is active (CPU smoke tests) or when a dimension isn't evenly
+divisible (shape-aware, like param fitting). This is what keeps GSPMD from
+replicating activations under FSDP-sharded weights (see EXPERIMENTS §Perf
+iteration 0).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES: Optional[Tuple[str, ...]] = None
+_AXIS_SIZES: Optional[dict] = None
+
+
+def set_mesh_context(dp_axes, axis_sizes) -> None:
+    global _DP_AXES, _AXIS_SIZES
+    _DP_AXES = tuple(dp_axes) if dp_axes else None
+    _AXIS_SIZES = dict(axis_sizes) if axis_sizes else None
+
+
+def clear_mesh_context() -> None:
+    set_mesh_context(None, None)
+
+
+def constrain(x: jax.Array, *dims):
+    """dims: one entry per axis of x — "dp", a mesh axis name, or None."""
+    if _DP_AXES is None or _AXIS_SIZES is None:
+        return x
+    spec = []
+    for size, d in zip(x.shape, dims):
+        if d is None:
+            spec.append(None)
+            continue
+        axes = _DP_AXES if d == "dp" else (d,)
+        total = math.prod(_AXIS_SIZES.get(a, 1) for a in axes)
+        spec.append((axes if d == "dp" else d)
+                    if (total and size % total == 0) else None)
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,152 @@
+"""Mamba-2 SSD (state-space duality) blocks — training scan + O(1) decode.
+
+Chunked SSD algorithm (Dao & Gu 2024): within chunks of length Q the output
+is an attention-like quadratic form masked by cumulative decays; across
+chunks a (H, P, N) state is carried by a linear recurrence. Both the
+intra-chunk form and the recurrence are exact — this is the standard
+sub-quadratic formulation that makes ``long_500k`` decodable in O(1)/token.
+
+Shapes (per layer): x (B, S, H, P) heads×headdim, B/C (B, S, N) shared
+across heads (G=1), dt (B, S, H), A (H,) negative decay rates.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rms_norm
+
+CONV_K = 4   # causal depthwise conv width (Mamba standard)
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Exact chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,); Bm/Cm: (B, S, N).
+    Returns y: (B, S, H, P).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = Bm.reshape(b, nc, chunk, n)
+    Cc = Cm.reshape(b, nc, chunk, n)
+
+    loga = dtc * A                                  # (b, nc, Q, h) ≤ 0
+    L = jnp.cumsum(loga, axis=2)                    # within-chunk cumulative
+
+    # --- intra-chunk quadratic term ------------------------------------
+    # M[t, s] = (C_t · B_s) · exp(L_t − L_s) · dt_s   for s ≤ t
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc
+                    ).astype(jnp.float32)                     # (b,nc,Q,Q)
+    decay = L[:, :, :, None, :] - L[:, :, None, :, :]         # (b,nc,Q,Q,h)
+    tmask = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    gate = jnp.where(tmask[None, None, :, :, None],
+                     jnp.exp(decay), 0.0)
+    m = cb[..., None] * gate * dtc[:, :, None, :, :]          # (b,nc,Q,Q,h)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m.astype(x.dtype), xc)
+
+    # --- chunk summaries and inter-chunk recurrence ---------------------
+    # S_c = Σ_s exp(L_end − L_s) dt_s · B_s ⊗ x_s      (b, nc, h, n, p)
+    end_decay = jnp.exp(L[:, :, -1:, :] - L)                  # (b,nc,Q,h)
+    wgt = (end_decay * dtc).astype(x.dtype)
+    s_chunk = jnp.einsum("bcsh,bcsn,bcshp->bchnp", wgt, Bc.astype(x.dtype), xc)
+    chunk_decay = jnp.exp(L[:, :, -1, :])                     # (b,nc,h)
+
+    def body(hstate, inp):
+        s_c, g_c = inp                    # (b,h,n,p), (b,h)
+        out = hstate                      # state BEFORE this chunk
+        new = hstate * g_c[..., None, None].astype(x.dtype) + s_c
+        return new, out
+
+    h0 = jnp.zeros((b, h, n, p), x.dtype)
+    _, h_prev = jax.lax.scan(
+        body, h0, (s_chunk.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                  # (b,nc,h,n,p)
+
+    # --- inter-chunk contribution ---------------------------------------
+    instate_decay = jnp.exp(L).astype(x.dtype)                # (b,nc,Q,h)
+    y_inter = jnp.einsum("bcth,bctn,bchnp->bcthp",
+                         instate_decay, Cc.astype(x.dtype), h_prev)
+    return (y_intra + y_inter).reshape(b, s, h, p)
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: (B, S, C); w: (K, C)."""
+    pads = jnp.pad(u, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u)
+    for i in range(CONV_K):
+        out = out + pads[:, i:i + u.shape[1]] * w[i]
+    return out
+
+
+def mamba2_block(x: jax.Array, p: dict, cfg, chunk: int = 256) -> jax.Array:
+    """Full Mamba-2 mixer. x: (B, S, D) → (B, S, D)."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    din = h * pdim
+    zxbc = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbc, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"]))
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])                   # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                  # (H,)
+    y = _ssd_chunked(xin.reshape(b, s, h, pdim), dt, A, Bm, Cm, chunk)
+    y = y + xin.reshape(b, s, h, pdim) * p["D_skip"][None, None, :, None]
+    y = y.reshape(b, s, din) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+
+def mamba2_decode(x: jax.Array, p: dict, cfg, ssm_state, conv_state):
+    """One-token decode. x: (B, 1, D); ssm_state: (B, H, N, P);
+    conv_state: (B, CONV_K-1, C). Returns (y, ssm_state, conv_state)."""
+    b = x.shape[0]
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    din = h * pdim
+    zxbc = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xin, Bm, Cm, dt = jnp.split(
+        zxbc, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)         # (B,1,C)
+    window = jnp.concatenate([conv_state, conv_in], axis=1)   # (B,K,C)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", window,
+                                      p["conv_w"]))[:, None, :]
+    new_conv_state = window[:, 1:]
+    xin, Bm, Cm = jnp.split(conv_out, [din, din + n], axis=-1)
+    dt = jax.nn.softplus(dt + p["dt_bias"])[:, 0]             # (B,H)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                       # (B,H)
+    xh = xin.reshape(b, h, pdim)
+    dBx = jnp.einsum("bh,bn,bhp->bhnp", dt.astype(x.dtype),
+                     Bm[:, 0].astype(x.dtype), xh)
+    new_state = ssm_state * a[..., None, None].astype(x.dtype) + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(x.dtype), new_state)
+    y = y + xh * p["D_skip"][None, :, None]
+    y = y.reshape(b, 1, din) * jax.nn.silu(z)
+    y = rms_norm(y, p["out_norm"], cfg.norm_eps)
+    return (jnp.einsum("bse,ed->bsd", y, p["out_proj"]),
+            new_state, new_conv_state)
+
+
+def mamba2_param_shapes(cfg) -> dict:
+    d = cfg.d_model
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    din = h * pdim
+    conv_c = din + 2 * n
+    return {
+        "in_proj": (d, 2 * din + 2 * n + h),
+        "conv_w": (CONV_K, conv_c),
+        "dt_bias": (h,),
+        "A_log": (h,),
+        "D_skip": (h,),
+        "out_norm": (din,),
+        "out_proj": (din, d),
+    }

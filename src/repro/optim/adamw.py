@@ -1,0 +1,71 @@
+"""Sharded AdamW with global-norm clipping (ZeRO-style: states shard like
+params — the dry-run in_shardings reuse the param PartitionSpecs for m/v)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class AdamWState:
+    m: Any
+    v: Any
+    step: jax.Array      # () int32
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def abstract_opt_state(abstract_params) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(f32, abstract_params),
+                      v=jax.tree.map(f32, abstract_params),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state: AdamWState, lr: jax.Array,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / c1
+        vhat = v / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return (new_params,
+            AdamWState(m=new_m, v=new_v, step=step),
+            {"grad_norm": gnorm})

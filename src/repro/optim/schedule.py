@@ -1,0 +1,13 @@
+"""LR schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * jnp.minimum(1.0, step / max(1, warmup))
+    frac = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, base_lr * cos)

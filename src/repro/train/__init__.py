@@ -1,0 +1,4 @@
+"""Training/serving runtime."""
+from .trainer import TrainState, Trainer, init_train_state, make_train_step
+
+__all__ = ["TrainState", "Trainer", "init_train_state", "make_train_step"]

@@ -1,0 +1,172 @@
+"""Training runtime: step function factory + fault-tolerant Trainer loop.
+
+``make_train_step`` builds one jit-able update:
+  microbatch gradient accumulation (lax.scan, remat'd model) →
+  optional error-feedback gradient compression →
+  AdamW with global-norm clip →
+  NaN/Inf step rejection (the update is applied only if loss and grad norm
+  are finite — a poisoned batch skips, it does not kill the run).
+
+``Trainer`` owns the loop: deterministic batches by step index (any host
+can serve any step — straggler/replacement tolerance), periodic atomic
+checkpoints, resume-from-latest, metric history. Distribution comes from
+the caller's jit shardings (see launch/train.py); the loop itself is
+single-controller and mesh-agnostic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.grad_compress import ef_compress_tree, zero_residuals
+from repro.optim.schedule import cosine_schedule
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: AdamWState
+    ef: Any            # error-feedback residuals ({} when compression off)
+
+
+def init_train_state(model, seed: int = 0, compress_bits: int = 0
+                     ) -> TrainState:
+    params = model.init(seed)
+    return TrainState(
+        params=params, opt=adamw_init(params),
+        ef=zero_residuals(params) if compress_bits else {})
+
+
+def make_train_step(model, *, grad_accum: int = 1, base_lr: float = 3e-4,
+                    warmup: int = 100, total_steps: int = 10_000,
+                    compress_bits: int = 0, q_chunk: Optional[int] = 512,
+                    nan_skip: bool = True) -> Callable:
+    """Returns ``step(state, batch) -> (state, metrics)``.
+
+    ``batch``: {"tokens": (B, S+1), **extras}. B must divide by grad_accum.
+    """
+    extras_keys = tuple(model.extras_shapes(1).keys())
+
+    def loss_of(params, tokens, extras):
+        return model.loss_fn(params, tokens, extras, q_chunk=q_chunk)
+
+    def grads_of(params, batch):
+        tokens = batch["tokens"]
+        extras = {k: batch[k] for k in extras_keys} or None
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_of)(params, tokens, extras)
+        b = tokens.shape[0]
+        assert b % grad_accum == 0
+        mb = b // grad_accum
+        mb_tokens = tokens.reshape(grad_accum, mb, *tokens.shape[1:])
+        mb_extras = jax.tree.map(
+            lambda x: x.reshape(grad_accum, mb, *x.shape[1:]),
+            extras) if extras else None
+
+        def body(carry, xs):
+            acc_loss, acc_g = carry
+            tok = xs["tokens"]
+            ext = {k: xs[k] for k in extras_keys} or None
+            loss, g = jax.value_and_grad(loss_of)(params, tok, ext)
+            return (acc_loss + loss,
+                    jax.tree.map(jnp.add, acc_g, g)), None
+
+        zero_g = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        xs = {"tokens": mb_tokens, **(mb_extras or {})}
+        (loss_sum, g_sum), _ = jax.lax.scan(body, (jnp.float32(0), zero_g),
+                                            xs)
+        inv = 1.0 / grad_accum
+        return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+    def step(state: TrainState, batch) -> tuple[TrainState, Dict]:
+        loss, grads = grads_of(state.params, batch)
+        ef = state.ef
+        if compress_bits:
+            grads, ef = ef_compress_tree(grads, ef, compress_bits)
+        lr = cosine_schedule(state.opt.step, base_lr, warmup, total_steps)
+        new_params, new_opt, metrics = adamw_update(
+            state.params, grads, state.opt, lr)
+        if nan_skip:
+            good = jnp.isfinite(loss) & jnp.isfinite(metrics["grad_norm"])
+            sel = lambda new, old: jax.tree.map(
+                lambda a, b: jnp.where(good, a, b), new, old)
+            new_params = sel(new_params, state.params)
+            new_opt = AdamWState(m=sel(new_opt.m, state.opt.m),
+                                 v=sel(new_opt.v, state.opt.v),
+                                 step=jnp.where(good, new_opt.step,
+                                                state.opt.step))
+            ef = sel(ef, state.ef) if compress_bits else ef
+            metrics = {**metrics, "skipped": (~good).astype(jnp.int32)}
+        new_state = TrainState(params=new_params, opt=new_opt, ef=ef)
+        return new_state, {"loss": loss, "lr": lr, **metrics}
+
+    return step
+
+
+class Trainer:
+    """Fault-tolerant training loop over a deterministic batcher."""
+
+    def __init__(self, model, batcher, *, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 100, keep: int = 3, seed: int = 0,
+                 log_every: int = 10, step_fn: Optional[Callable] = None,
+                 compress_bits: int = 0, **step_kwargs):
+        self.model = model
+        self.batcher = batcher
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.log_every = log_every
+        self.compress_bits = compress_bits
+        self.step_fn = jax.jit(step_fn or make_train_step(
+            model, compress_bits=compress_bits, **step_kwargs))
+        self.state = init_train_state(model, seed, compress_bits)
+        self.start_step = 0
+        self.history: list[dict] = []
+
+    def maybe_resume(self) -> int:
+        """Resume from the newest checkpoint if one exists."""
+        if not self.ckpt_dir:
+            return 0
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return 0
+        self.state, meta = restore_checkpoint(self.ckpt_dir, self.state)
+        self.start_step = int(meta["step"])
+        return self.start_step
+
+    def run(self, num_steps: int) -> list[dict]:
+        t0 = time.time()
+        step = self.start_step
+        end = self.start_step + num_steps
+        while step < end:
+            batch_np = self.batcher.batch_at(step)
+            batch = {"tokens": jnp.asarray(batch_np)}
+            for k, shp in self.model.extras_shapes(
+                    batch_np.shape[0]).items():
+                batch[k] = jnp.zeros(shp, jnp.bfloat16)
+            self.state, metrics = self.step_fn(self.state, batch)
+            step += 1
+            if step % self.log_every == 0 or step == end:
+                rec = {"step": step,
+                       "loss": float(metrics["loss"]),
+                       "grad_norm": float(metrics["grad_norm"]),
+                       "elapsed_s": round(time.time() - t0, 2)}
+                self.history.append(rec)
+                print(f"step {rec['step']:6d}  loss {rec['loss']:.4f}  "
+                      f"gnorm {rec['grad_norm']:.3f}  "
+                      f"{rec['elapsed_s']:.1f}s", flush=True)
+            if self.ckpt_dir and (step % self.ckpt_every == 0
+                                  or step == end):
+                save_checkpoint(self.ckpt_dir, step, self.state,
+                                keep=self.keep)
+        self.start_step = step
+        return self.history

@@ -1,0 +1,20 @@
+"""Shared test config. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real single CPU device (the 512-device override belongs to
+the dry-run only)."""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+# jit compilation makes single examples slow; disable deadlines globally.
+settings.register_profile(
+    "repro",
+    deadline=None,
+    max_examples=15,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,74 @@
+"""Unit + property tests for the packed-word substrate (core.bitops)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import bitops
+
+
+@given(st.integers(1, 4000), st.integers(0, 2**32 - 1))
+def test_pack_unpack_roundtrip(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    words = bitops.pack_bits(bitops.pad_bits(jnp.asarray(bits)))
+    assert words.shape[0] == bitops.num_words(n)
+    back = np.asarray(bitops.unpack_bits(words, n))
+    assert np.array_equal(back, bits)
+
+
+@given(st.integers(1, 2000), st.integers(0, 2**32 - 1))
+def test_word_prefix_popcount(n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    words = bitops.pack_bits(bitops.pad_bits(jnp.asarray(bits)))
+    prefix = np.asarray(bitops.word_prefix_popcount(words))
+    w = bitops.num_words(n)
+    padded = np.zeros(w * 32, np.uint8)
+    padded[:n] = bits
+    expect = np.concatenate([[0], np.cumsum(padded.reshape(w, 32).sum(1))])[:-1]
+    assert np.array_equal(prefix, expect)
+
+
+@given(st.integers(0, 2**32 - 1))
+def test_select_in_word(seed):
+    rng = np.random.default_rng(seed)
+    word = np.uint32(rng.integers(0, 2**32, dtype=np.uint64))
+    ones = [i for i in range(32) if (int(word) >> i) & 1]
+    for k, pos in enumerate(ones):
+        got = int(bitops.select_in_word(jnp.uint32(word), jnp.int32(k)))
+        assert got == pos, (hex(int(word)), k)
+
+
+@given(st.integers(0, 33))
+def test_mask_below(k):
+    m = int(bitops.mask_below(jnp.uint32(min(k, 32))))
+    assert m == (1 << min(k, 32)) - 1
+
+
+@given(st.sampled_from([1, 2, 4, 8, 16]), st.integers(1, 1000),
+       st.integers(0, 2**32 - 1))
+def test_pack_fields_roundtrip(width, n, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 1 << width, n).astype(np.uint32)
+    words = bitops.pack_fields(jnp.asarray(vals), width)
+    assert words.shape[0] == (n * width + 31) // 32
+    back = np.asarray(bitops.unpack_fields(words, width, n))
+    assert np.array_equal(back, vals)
+
+
+def test_extract_field_and_bit():
+    vals = jnp.asarray([0b101101, 0b011010], jnp.uint32)
+    assert np.array_equal(np.asarray(bitops.extract_bit(vals, jnp.uint32(0))),
+                          [1, 0])
+    assert np.array_equal(
+        np.asarray(bitops.extract_field(vals, jnp.uint32(2), 3)),
+        [0b011, 0b110])
+
+
+@given(st.integers(1, 300), st.integers(0, 2**32 - 1))
+def test_rank1_word_matches_popcount_prefix(n, seed):
+    rng = np.random.default_rng(seed)
+    word = jnp.uint32(rng.integers(0, 2**32, dtype=np.uint64))
+    bits = [(int(word) >> i) & 1 for i in range(32)]
+    for i in (0, 1, 7, 31, 32):
+        assert int(bitops.rank1_word(word, jnp.uint32(i))) == sum(bits[:i])

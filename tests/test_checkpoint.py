@@ -1,0 +1,91 @@
+"""Checkpoint subsystem: atomic save/restore, pruning, dtype round-trips."""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (checkpoint_steps, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _state(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 4), jnp.float32),
+                   "b": jnp.ones((4,), jnp.bfloat16)},
+        "opt": {"m": jnp.zeros((8, 4)), "step": jnp.int32(17)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 100, state)
+    restored, meta = restore_checkpoint(tmp_path, state)
+    assert meta["step"] == 100
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        assert np.array_equal(np.asarray(a, np.float32),
+                              np.asarray(b, np.float32))
+
+
+def test_bfloat16_roundtrip_exact(tmp_path):
+    x = {"p": (jnp.arange(100, dtype=jnp.float32) / 7).astype(jnp.bfloat16)}
+    save_checkpoint(tmp_path, 1, x)
+    y, _ = restore_checkpoint(tmp_path, x)
+    assert y["p"].dtype == jnp.bfloat16
+    assert np.array_equal(np.asarray(x["p"], np.float32),
+                          np.asarray(y["p"], np.float32))
+
+
+def test_latest_and_prune(tmp_path):
+    s = _state()
+    for step in (10, 20, 30, 40):
+        save_checkpoint(tmp_path, step, s, keep=2)
+    assert latest_step(tmp_path) == 40
+    assert checkpoint_steps(tmp_path) == [30, 40]
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_checkpoint(tmp_path, 5, _state())
+    leftovers = [p for p in Path(tmp_path).iterdir()
+                 if p.name.startswith(".tmp")]
+    assert not leftovers
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    """A directory without meta.json (interrupted write) is not listed."""
+    save_checkpoint(tmp_path, 5, _state())
+    bad = Path(tmp_path) / "step_00000009"
+    bad.mkdir()
+    assert latest_step(tmp_path) == 5
+
+
+def test_restore_into_different_sharding(tmp_path):
+    """Elastic restore: place leaves with explicit shardings on a mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state = _state()
+    save_checkpoint(tmp_path, 7, state)
+    mesh = jax.make_mesh((1,), ("data",))
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    restored, _ = restore_checkpoint(tmp_path, state, shardings=shardings)
+    leaf = restored["params"]["w"]
+    assert isinstance(leaf.sharding, NamedSharding)
+
+
+def test_shape_mismatch_raises(tmp_path):
+    state = _state()
+    save_checkpoint(tmp_path, 3, state)
+    bad_target = {**state,
+                  "params": {"w": jnp.zeros((4, 4)), "b": state["params"]["b"]}}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        restore_checkpoint(tmp_path, bad_target)
+
+
+def test_meta_contents(tmp_path):
+    d = save_checkpoint(tmp_path, 12, _state(), extra_meta={"arch": "x"})
+    meta = json.loads((d / "meta.json").read_text())
+    assert meta["arch"] == "x" and meta["step"] == 12
+    assert meta["num_arrays"] == 4

@@ -1,0 +1,86 @@
+"""Data substrate: compressed corpus store + deterministic batch pipeline."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (TokenBatcher, batch_offsets, build_compressed_corpus,
+                        make_corpus, token_histogram)
+
+
+@pytest.fixture(scope="module")
+def corpus_pair():
+    toks = make_corpus(120_000, vocab_size=2003, seed=3)
+    corpus = build_compressed_corpus(toks, sigma=2003, shard_bits=14)
+    return toks, corpus
+
+
+def test_access_random_positions(corpus_pair):
+    toks, corpus = corpus_pair
+    rng = np.random.default_rng(0)
+    pos = rng.integers(0, corpus.n, 400)
+    got = np.asarray(corpus.access(jnp.asarray(pos)))
+    assert np.array_equal(got, toks[pos].astype(got.dtype))
+
+
+def test_decode_slice_across_shards(corpus_pair):
+    toks, corpus = corpus_pair
+    start = corpus.shard_size - 50
+    got = np.asarray(corpus.decode_slice(jnp.int32(start), 150))
+    assert np.array_equal(got, toks[start:start + 150].astype(got.dtype))
+
+
+def test_histogram_and_count(corpus_pair):
+    toks, corpus = corpus_pair
+    hist = np.asarray(token_histogram(corpus))
+    assert np.array_equal(hist, np.bincount(toks, minlength=2003)[:2003])
+    c = int(np.argmax(hist))
+    for upto in (1, 1000, 55555, corpus.n):
+        got = int(corpus.count(jnp.int32(c), jnp.int32(upto)))
+        assert got == int((toks[:upto] == c).sum())
+
+
+def test_locate(corpus_pair):
+    toks, corpus = corpus_pair
+    hist = np.asarray(token_histogram(corpus))
+    for c in np.argsort(hist)[-3:]:
+        occ = np.flatnonzero(toks == c)
+        ks = np.unique(np.random.default_rng(1).integers(0, len(occ), 20))
+        got = np.asarray(corpus.locate(jnp.full(len(ks), int(c)),
+                                       jnp.asarray(ks)))
+        assert np.array_equal(got, occ[ks])
+
+
+def test_compression_beats_raw(corpus_pair):
+    _, corpus = corpus_pair
+    # ceil(log2 2003) = 11 bits + directories ≪ 32-bit raw
+    assert corpus.bits_per_token() < 20
+
+
+def test_batch_addressing_deterministic():
+    offs1 = batch_offsets(step=7, batch=16, n_tokens=100_000, seq_len=128,
+                          seed=5)
+    offs2 = batch_offsets(step=7, batch=16, n_tokens=100_000, seq_len=128,
+                          seed=5)
+    assert np.array_equal(offs1, offs2)
+    offs3 = batch_offsets(step=8, batch=16, n_tokens=100_000, seq_len=128,
+                          seed=5)
+    assert not np.array_equal(offs1, offs3)
+    assert offs1.max() < 100_000 - 128 - 1
+
+
+def test_batcher_compressed_equals_raw(corpus_pair):
+    toks, corpus = corpus_pair
+    b_raw = TokenBatcher(tokens=toks, batch=4, seq_len=64, seed=9)
+    b_wm = TokenBatcher(corpus=corpus, batch=4, seq_len=64, seed=9)
+    for step in (0, 3, 1000):
+        assert np.array_equal(b_raw.batch_at(step), b_wm.batch_at(step))
+
+
+def test_prefetch_iterator(corpus_pair):
+    toks, _ = corpus_pair
+    b = TokenBatcher(tokens=toks, batch=2, seq_len=32, seed=1)
+    it = b.iterate(start_step=5, prefetch=2)
+    first = next(it)
+    assert np.array_equal(first, b.batch_at(5))
+    second = next(it)
+    assert np.array_equal(second, b.batch_at(6))

@@ -1,0 +1,95 @@
+"""Arbitrary-shape (Huffman) and multiary wavelet trees (Theorems 4.3, 4.4)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+from repro.core.huffman import (build_huffman_wavelet_tree, canonical_codes,
+                                huffman_code_lengths, huffman_codebook,
+                                reference_huffman_levels)
+from repro.core.multiary import (build_multiary_wavelet_tree, mwt_access,
+                                 mwt_rank, mwt_select)
+
+
+def test_huffman_codes_prefix_free():
+    rng = np.random.default_rng(0)
+    freqs = rng.integers(1, 1000, 57)
+    codes, lengths, max_len = huffman_codebook(freqs)
+    # Kraft equality for a full binary tree
+    assert sum(2.0 ** -l for l in lengths) == 1.0
+    # prefix-freedom: no codeword is a prefix of another
+    strs = [format(c, "0" + str(l) + "b") for c, l in zip(codes, lengths)]
+    for i, a in enumerate(strs):
+        for j, b in enumerate(strs):
+            if i != j:
+                assert not b.startswith(a)
+
+
+@given(st.integers(2, 40), st.integers(10, 1500), st.floats(0.5, 2.0),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=10)
+def test_huffman_tree_levels_match_oracle(sigma, n, zipf, seed):
+    rng = np.random.default_rng(seed)
+    p = np.arange(1, sigma + 1) ** (-zipf)
+    seq = rng.choice(sigma, size=n, p=p / p.sum()).astype(np.uint32)
+    freqs = np.bincount(seq, minlength=sigma) + 1
+    codes, lengths, max_len = huffman_codebook(freqs)
+    t = build_huffman_wavelet_tree(jnp.asarray(seq), jnp.asarray(codes),
+                                   jnp.asarray(lengths), max_len)
+    ref = reference_huffman_levels(seq.astype(np.int64), codes, lengths,
+                                   max_len)
+    for l, rl in enumerate(ref):
+        got = np.asarray(bitops.unpack_bits(t.level(l).words, len(rl)))
+        assert np.array_equal(got, rl), f"level {l}"
+        assert int(t.active[l]) == len(rl)
+    # compressed size equals sum of code lengths
+    assert int(t.total_bits) == int(lengths[seq].sum())
+
+
+def test_huffman_beats_balanced_on_skewed_data():
+    """The point of Theorem 4.3: entropy-shaped trees store fewer bits."""
+    rng = np.random.default_rng(1)
+    sigma, n = 64, 4096
+    p = np.arange(1, sigma + 1) ** (-1.5)
+    seq = rng.choice(sigma, size=n, p=p / p.sum()).astype(np.uint32)
+    freqs = np.bincount(seq, minlength=sigma) + 1
+    codes, lengths, max_len = huffman_codebook(freqs)
+    t = build_huffman_wavelet_tree(jnp.asarray(seq), jnp.asarray(codes),
+                                   jnp.asarray(lengths), max_len)
+    balanced_bits = n * 6                      # ceil(log2 64) per symbol
+    assert int(t.total_bits) < 0.8 * balanced_bits
+
+
+@given(st.integers(2, 200), st.sampled_from([1, 2, 4]),
+       st.integers(2, 1500), st.integers(0, 2**32 - 1))
+@settings(max_examples=12)
+def test_multiary_tree_queries(sigma, width, n, seed):
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    t = build_multiary_wavelet_tree(jnp.asarray(seq), sigma, width=width)
+    assert np.array_equal(np.asarray(mwt_access(t, jnp.arange(n))), seq)
+    for c in np.unique(rng.choice(seq, size=min(3, n))):
+        idx = np.unique(rng.integers(0, n + 1, 12))
+        r = np.asarray(mwt_rank(t, jnp.full(len(idx), int(c)),
+                                jnp.asarray(idx)))
+        expect = np.array([(seq[:i] == c).sum() for i in idx])
+        assert np.array_equal(r, expect), ("rank", c)
+        occ = np.flatnonzero(seq == c)
+        ks = np.unique(rng.integers(0, len(occ), 6))
+        s = np.asarray(mwt_select(t, jnp.full(len(ks), int(c)),
+                                  jnp.asarray(ks)))
+        assert np.array_equal(s, occ[ks]), ("select", c)
+
+
+def test_multiary_degrees_consistent():
+    """Same sequence through d=2/4/16 trees answers identically."""
+    rng = np.random.default_rng(2)
+    sigma, n = 100, 777
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    idx = jnp.asarray(np.arange(0, n, 13))
+    outs = []
+    for width in (1, 2, 4):
+        t = build_multiary_wavelet_tree(jnp.asarray(seq), sigma, width=width)
+        outs.append(np.asarray(mwt_access(t, idx)))
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])

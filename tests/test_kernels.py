@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU).
+
+Per instructions: sweep shapes/dtypes per kernel and assert exact equality
+(all outputs are integers) against ref.py.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# bitpack
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 4095, 4096, 4097, 70000])
+@pytest.mark.parametrize("dtype", [np.uint8, np.int32, np.bool_])
+def test_bitpack_shapes_dtypes(n, dtype):
+    rng = np.random.default_rng(n)
+    bits = rng.integers(0, 2, n).astype(dtype)
+    got = np.asarray(ops.bitpack(jnp.asarray(bits)))
+    want = np.asarray(ref.bitpack_ref(jnp.asarray(bits.astype(np.uint8))))
+    assert np.array_equal(got, want)
+
+
+@given(st.integers(1, 3000), st.integers(0, 2**32 - 1))
+@settings(max_examples=8)
+def test_bitpack_property(n, seed):
+    bits = np.random.default_rng(seed).integers(0, 2, n).astype(np.uint8)
+    got = np.asarray(ops.bitpack(jnp.asarray(bits)))
+    want = np.asarray(ref.bitpack_ref(jnp.asarray(bits)))
+    assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# rank_build
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 128, 129, 16384, 16385, 131072, 200000])
+def test_rank_build_shapes(n):
+    rng = np.random.default_rng(n)
+    bits = rng.integers(0, 2, n).astype(np.uint8)
+    words = ref.bitpack_ref(jnp.asarray(bits))
+    sb, blk = ops.rank_build(words, n)
+    sb2, blk2 = ref.rank_build_ref(words, n)
+    assert sb.dtype == jnp.uint32 and blk.dtype == jnp.uint16
+    assert np.array_equal(np.asarray(sb), np.asarray(sb2))
+    assert np.array_equal(np.asarray(blk), np.asarray(blk2))
+
+
+@given(st.integers(1, 100000), st.floats(0.01, 0.99),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=8)
+def test_rank_build_property(n, density, seed):
+    bits = (np.random.default_rng(seed).random(n) < density).astype(np.uint8)
+    words = ref.bitpack_ref(jnp.asarray(bits))
+    sb, blk = ops.rank_build(words, n)
+    sb2, blk2 = ref.rank_build_ref(words, n)
+    assert np.array_equal(np.asarray(sb), np.asarray(sb2))
+    assert np.array_equal(np.asarray(blk), np.asarray(blk2))
+
+
+def test_rank_build_kernel_feeds_rank_queries():
+    """Kernel outputs drop into a BinaryRank and answer queries correctly."""
+    from repro.core import bitops
+    from repro.core.rank_select import BinaryRank, rank1
+    rng = np.random.default_rng(9)
+    n = 50000
+    bits = (rng.random(n) < 0.4).astype(np.uint8)
+    words = ref.bitpack_ref(jnp.asarray(bits))
+    sb, blk = ops.rank_build(words, n)
+    rs = BinaryRank(words=words, superblock=sb, block=blk, n=n)
+    idx = rng.integers(0, n + 1, 200)
+    got = np.asarray(rank1(rs, jnp.asarray(idx)))
+    cum = np.concatenate([[0], np.cumsum(bits)])
+    assert np.array_equal(got, cum[idx])
+
+
+# ---------------------------------------------------------------------------
+# wm_level_step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 1023, 1024, 1025, 8192, 50000])
+@pytest.mark.parametrize("shift", [0, 3, 7])
+def test_wm_level_shapes(n, shift):
+    rng = np.random.default_rng(n + shift)
+    sub = rng.integers(0, 256, n).astype(np.uint32)
+    d1, b1, t1 = ops.wm_level_step(jnp.asarray(sub), shift, n)
+    d2, b2, t2 = ref.wm_level_step_ref(jnp.asarray(sub), shift, n)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert int(t1) == int(t2)
+
+
+@given(st.integers(1, 20000), st.integers(0, 7), st.integers(0, 2**32 - 1))
+@settings(max_examples=8)
+def test_wm_level_property(n, shift, seed):
+    sub = np.random.default_rng(seed).integers(0, 256, n).astype(np.uint32)
+    d1, b1, t1 = ops.wm_level_step(jnp.asarray(sub), shift, n)
+    d2, b2, t2 = ref.wm_level_step_ref(jnp.asarray(sub), shift, n)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert int(t1) == int(t2)
+
+
+def test_wm_level_dest_is_stable_partition():
+    """Kernel destinations realize the stable 0/1 partition semantics."""
+    rng = np.random.default_rng(11)
+    n, shift = 5000, 4
+    sub = rng.integers(0, 256, n).astype(np.uint32)
+    dest, _, tz = ops.wm_level_step(jnp.asarray(sub), shift, n)
+    dest = np.asarray(dest)
+    bit = (sub >> shift) & 1
+    assert sorted(dest.tolist()) == list(range(n))
+    out = np.empty(n, np.int64)
+    out[dest] = np.arange(n)
+    expect = np.concatenate([np.flatnonzero(bit == 0),
+                             np.flatnonzero(bit == 1)])
+    assert np.array_equal(out, expect)
+    assert int(tz) == int((bit == 0).sum())

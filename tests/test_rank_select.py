@@ -1,0 +1,115 @@
+"""Exact-equality tests for the succinct rank/select structures (paper §5)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitops
+from repro.core.rank_select import (bitvector_bits, build_binary_rank,
+                                    build_bitvector, build_generalized,
+                                    generalized_access, generalized_rank,
+                                    generalized_select, rank0, rank1,
+                                    select0, select1)
+
+
+def _bv(bits, sr=512):
+    words = bitops.pack_bits(bitops.pad_bits(jnp.asarray(bits)))
+    return build_bitvector(words, len(bits), sr)
+
+
+@given(st.integers(1, 20000), st.floats(0.01, 0.99),
+       st.sampled_from([128, 512, 2048]), st.integers(0, 2**32 - 1))
+def test_binary_rank_select_exact(n, density, sr, seed):
+    rng = np.random.default_rng(seed)
+    bits = (rng.random(n) < density).astype(np.uint8)
+    bv = _bv(bits, sr)
+    idx = np.unique(rng.integers(0, n + 1, 64))
+    got1 = np.asarray(rank1(bv.rank, jnp.asarray(idx)))
+    cum = np.concatenate([[0], np.cumsum(bits)])
+    assert np.array_equal(got1, cum[idx])
+    got0 = np.asarray(rank0(bv.rank, jnp.asarray(idx)))
+    assert np.array_equal(got0, idx - cum[idx])
+
+    ones = np.flatnonzero(bits == 1)
+    zeros = np.flatnonzero(bits == 0)
+    if len(ones):
+        ks = np.unique(rng.integers(0, len(ones), 32))
+        got = np.asarray(select1(bv.rank, bv.sel1, jnp.asarray(ks)))
+        assert np.array_equal(got, ones[ks])
+    if len(zeros):
+        ks = np.unique(rng.integers(0, len(zeros), 32))
+        got = np.asarray(select0(bv.rank, bv.sel0, jnp.asarray(ks)))
+        assert np.array_equal(got, zeros[ks])
+
+
+def test_rank_select_adversarial_patterns():
+    """All-zeros, all-ones, alternating, single-bit, block boundaries."""
+    for n in (1, 31, 32, 33, 127, 128, 129, 1024, 1025):
+        for pat in ("zeros", "ones", "alt", "first", "last"):
+            bits = {
+                "zeros": np.zeros(n, np.uint8),
+                "ones": np.ones(n, np.uint8),
+                "alt": (np.arange(n) % 2).astype(np.uint8),
+                "first": np.eye(1, n, 0, dtype=np.uint8)[0],
+                "last": np.eye(1, n, n - 1, dtype=np.uint8)[0],
+            }[pat]
+            bv = _bv(bits, sr=128)
+            cum = np.concatenate([[0], np.cumsum(bits)])
+            idx = np.arange(n + 1)
+            assert np.array_equal(
+                np.asarray(rank1(bv.rank, jnp.asarray(idx))), cum[idx]), \
+                (n, pat)
+            ones = np.flatnonzero(bits == 1)
+            if len(ones):
+                got = np.asarray(select1(bv.rank, bv.sel1,
+                                         jnp.arange(len(ones))))
+                assert np.array_equal(got, ones), (n, pat)
+            zeros = np.flatnonzero(bits == 0)
+            if len(zeros):
+                got = np.asarray(select0(bv.rank, bv.sel0,
+                                         jnp.arange(len(zeros))))
+                assert np.array_equal(got, zeros), (n, pat)
+
+
+def test_structure_is_succinct():
+    """Directory overhead must be o(n)-ish: < 35% of the bitmap at 1M bits."""
+    rng = np.random.default_rng(0)
+    n = 1 << 20
+    bits = (rng.random(n) < 0.5).astype(np.uint8)
+    bv = _bv(bits, sr=512)
+    assert bitvector_bits(bv) / n < 1.35
+
+
+def test_total_ones():
+    rng = np.random.default_rng(3)
+    bits = (rng.random(12345) < 0.3).astype(np.uint8)
+    words = bitops.pack_bits(bitops.pad_bits(jnp.asarray(bits)))
+    rs = build_binary_rank(words, len(bits))
+    assert int(rs.total_ones) == int(bits.sum())
+
+
+# ---------------------------------------------------------------------------
+# Generalized (σ-ary) structures — paper Section 5.2
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([1, 2, 4]), st.integers(1, 5000),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=10)
+def test_generalized_rank_select_access(width, n, seed):
+    sigma = 1 << width
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    g = build_generalized(jnp.asarray(seq), width, n)
+    assert np.array_equal(np.asarray(generalized_access(g, jnp.arange(n))),
+                          seq)
+    for c in range(sigma):
+        idx = np.unique(rng.integers(0, n + 1, 24))
+        got = np.asarray(generalized_rank(g, jnp.full(len(idx), c),
+                                          jnp.asarray(idx)))
+        expect = np.array([(seq[:i] == c).sum() for i in idx])
+        assert np.array_equal(got, expect), c
+        occ = np.flatnonzero(seq == c)
+        if len(occ):
+            ks = np.unique(rng.integers(0, len(occ), 16))
+            got = np.asarray(generalized_select(g, jnp.full(len(ks), c),
+                                                jnp.asarray(ks)))
+            assert np.array_equal(got, occ[ks]), c

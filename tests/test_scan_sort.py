@@ -1,0 +1,102 @@
+"""Property tests for prefix-sum primitives and stable integer sorting."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core.scan import (exclusive_sum, segmented_exclusive_sum,
+                             stable_partition_indices)
+from repro.core.sort import (bucket_ranks, counting_rank, radix_sort_stable,
+                             sort_pass, sort_permutation)
+
+
+@given(st.integers(1, 500), st.integers(0, 2**32 - 1))
+def test_exclusive_sum(n, seed):
+    x = np.random.default_rng(seed).integers(0, 100, n)
+    got = np.asarray(exclusive_sum(jnp.asarray(x, jnp.int32)))
+    expect = np.concatenate([[0], np.cumsum(x)[:-1]])
+    assert np.array_equal(got, expect)
+
+
+@given(st.integers(2, 300), st.integers(0, 2**32 - 1))
+def test_segmented_exclusive_sum(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 10, n)
+    starts = (rng.random(n) < 0.2).astype(np.int32)
+    starts[0] = 1
+    got = np.asarray(segmented_exclusive_sum(jnp.asarray(x, jnp.int32),
+                                             jnp.asarray(starts)))
+    expect = np.zeros(n, np.int64)
+    acc = 0
+    for i in range(n):
+        if starts[i]:
+            acc = 0
+        expect[i] = acc
+        acc += x[i]
+    assert np.array_equal(got, expect)
+
+
+@given(st.integers(1, 400), st.integers(0, 2**32 - 1))
+def test_stable_partition(n, seed):
+    flags = np.random.default_rng(seed).integers(0, 2, n).astype(np.int32)
+    dest = np.asarray(stable_partition_indices(jnp.asarray(flags)))
+    assert sorted(dest.tolist()) == list(range(n))    # a permutation
+    out = np.empty(n, np.int64)
+    out[dest] = np.arange(n)
+    # zeros first in original order, then ones in original order
+    expect = np.concatenate([np.flatnonzero(flags == 0),
+                             np.flatnonzero(flags == 1)])
+    assert np.array_equal(out, expect)
+
+
+@given(st.integers(1, 3000), st.integers(2, 64), st.integers(0, 2**32 - 1))
+def test_counting_rank_is_stable_sort(n, nb, seed):
+    digits = np.random.default_rng(seed).integers(0, nb, n).astype(np.int32)
+    dest = np.asarray(counting_rank(jnp.asarray(digits), nb))
+    assert sorted(dest.tolist()) == list(range(n))
+    inv = np.empty(n, np.int64)
+    inv[dest] = np.arange(n)
+    assert np.array_equal(inv, np.argsort(digits, kind="stable"))
+
+
+@given(st.integers(1, 800), st.integers(2, 32), st.integers(0, 2**32 - 1))
+def test_bucket_ranks(n, nb, seed):
+    digits = np.random.default_rng(seed).integers(0, nb, n).astype(np.int32)
+    got = np.asarray(bucket_ranks(jnp.asarray(digits), nb))
+    seen = {}
+    for i, d in enumerate(digits):
+        assert got[i] == seen.get(d, 0)
+        seen[d] = seen.get(d, 0) + 1
+
+
+@given(st.integers(1, 1500), st.sampled_from([4, 8, 13, 16]),
+       st.sampled_from([3, 5, 8]), st.sampled_from(["counting", "xla"]),
+       st.integers(0, 2**32 - 1))
+def test_radix_sort_stable(n, key_bits, bpp, backend, seed):
+    keys = np.random.default_rng(seed).integers(
+        0, 1 << key_bits, n).astype(np.uint32)
+    vals = np.arange(n, dtype=np.int32)
+    sk, (sv,) = radix_sort_stable(jnp.asarray(keys), key_bits,
+                                  values=(jnp.asarray(vals),),
+                                  bits_per_pass=bpp, backend=backend)
+    order = np.argsort(keys, kind="stable")
+    assert np.array_equal(np.asarray(sk), keys[order])
+    assert np.array_equal(np.asarray(sv), order)     # stability
+
+
+@given(st.integers(1, 1000), st.integers(0, 2**32 - 1))
+def test_sort_permutation_backends_agree(n, seed):
+    digits = np.random.default_rng(seed).integers(0, 16, n).astype(np.int32)
+    p1 = np.asarray(sort_permutation(jnp.asarray(digits), 16, "counting"))
+    p2 = np.asarray(sort_permutation(jnp.asarray(digits), 16, "xla"))
+    assert np.array_equal(p1, p2)
+
+
+def test_counting_rank_blocked_path():
+    """Force the lax.map blocked path (n > 4*block and many buckets)."""
+    rng = np.random.default_rng(7)
+    n, nb = 5000, 256
+    digits = rng.integers(0, nb, n).astype(np.int32)
+    dest = np.asarray(counting_rank(jnp.asarray(digits), nb))
+    inv = np.empty(n, np.int64)
+    inv[dest] = np.arange(n)
+    assert np.array_equal(inv, np.argsort(digits, kind="stable"))

@@ -1,0 +1,116 @@
+"""Sharding-policy and vocab-padding tests (§Perf iterations 2–3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHITECTURES, ModelConfig, get_config
+from repro.models.model import (abstract_params, build_model, count_params,
+                                param_specs)
+
+
+def test_padded_vocab_multiple_of_256():
+    for arch in ARCHITECTURES:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab_size
+        assert cfg.padded_vocab - cfg.vocab_size < 256
+
+
+def test_padding_never_predicted_and_loss_finite():
+    """Pad logits are masked: loss finite, pad-row lm_head grads ~0."""
+    cfg = ModelConfig(name="padtest", family="dense", num_layers=2,
+                      d_model=32, num_heads=2, num_kv_heads=1,
+                      d_ff=64, vocab_size=250)       # pads to 256
+    assert cfg.padded_vocab == 256
+    model = build_model(cfg)
+    params = model.init(0)
+    assert params["lm_head"].shape == (32, 256)
+    tokens = jnp.asarray(
+        np.random.default_rng(0).integers(0, 250, (2, 17)), jnp.int32)
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, tokens, None)
+    assert np.isfinite(float(loss))
+    # pad columns get zero probability → zero gradient signal
+    pad_grad = np.abs(np.asarray(grads["lm_head"][:, 250:], np.float32))
+    real_grad = np.abs(np.asarray(grads["lm_head"][:, :250], np.float32))
+    assert pad_grad.max() < 1e-6
+    assert real_grad.max() > 0
+    # decode logits for pad ids are -inf-ish
+    from repro.models.model import zero_cache
+    logits, _ = model.decode_step(params, tokens[:, :1],
+                                  zero_cache(cfg, 2, 8),
+                                  jnp.zeros((2,), jnp.int32))
+    assert np.all(np.asarray(logits[:, 250:]) < -1e29)
+
+
+@pytest.mark.parametrize("arch", ARCHITECTURES)
+def test_decode_mode_specs_fit_and_cover(arch):
+    """Decode-mode specs: rank-compatible, divisible, and (for non-FSDP
+    fallbacks) free of contraction-dim 'data' sharding on weight matmuls."""
+    import math
+    cfg = get_config(arch)
+    sizes = {"data": 16, "model": 16}
+    shapes = abstract_params(cfg)
+    specs = param_specs(cfg, sizes, mode="decode")
+    flat_s = jax.tree.leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: hasattr(x, "_normalized_spec"))
+    assert len(flat_s) == len(flat_p)
+    for s, p in zip(flat_s, flat_p):
+        for dim, ax in zip(s.shape, tuple(p) + (None,) * 8):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            size = math.prod(sizes.get(a, 1) for a in axes)
+            assert dim % size == 0, (arch, s.shape, p)
+
+
+def test_decode_mode_capacity_fallback():
+    """Large dense shards keep FSDP sharding at decode (llama-vision 11.25
+    GB/device TP; arctic replicates 8.2 GB of 56-head attention weights);
+    dbrx (dense remainder ~5B, experts 2D) takes TP-only mode."""
+    sizes = {"data": 16, "model": 16}
+    for arch in ("llama_3_2_vision_90b", "arctic_480b"):
+        cfg = get_config(arch)
+        specs_decode = param_specs(cfg, sizes, mode="decode")
+        specs_train = param_specs(cfg, sizes, mode="train")
+        assert jax.tree_util.tree_all(jax.tree.map(
+            lambda a, b: a == b, specs_decode, specs_train,
+            is_leaf=lambda x: hasattr(x, "_normalized_spec"))), arch
+    cfg = get_config("dbrx_132b")
+    sd = param_specs(cfg, sizes, mode="decode")
+    st = param_specs(cfg, sizes, mode="train")
+    assert sd["lm_head"] != st["lm_head"]
+
+
+def test_decode_mode_small_arch_is_tp_only():
+    cfg = get_config("qwen2_0_5b")
+    specs = param_specs(cfg, {"data": 16, "model": 16}, mode="decode")
+    # embed (V, d): V over model; lm_head (d, V): V over model; no "data"
+    flat = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: hasattr(x, "_normalized_spec"))
+    for p in flat:
+        for ax in p:
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            assert "data" not in axes, p
+
+
+def test_moe_global_dispatch_matches_vmap_path():
+    """The s==1 global dispatch and the train vmap path agree numerically
+    (same routing, same experts) when capacity is not binding."""
+    from repro.models.moe import moe_layer
+    cfg = get_config("dbrx_132b", smoke=True)
+    model = build_model(cfg)
+    params = model.init(0)
+    bp = jax.tree.map(lambda a: a[0], params["blocks"])["moe"]
+    rng = np.random.default_rng(0)
+    x1 = jnp.asarray(rng.normal(size=(4, 1, cfg.d_model)), jnp.float32)
+    out_decode = moe_layer(x1, bp, cfg, capacity_factor=64.0)
+    # simulate the train path by tiling the token to sequence length 2
+    # and comparing position 0 of a (4, 2, D) batch whose second token is
+    # identical — routing per-token, so outputs must match
+    x2 = jnp.concatenate([x1, x1], axis=1)
+    out_train = moe_layer(x2, bp, cfg, capacity_factor=64.0)
+    np.testing.assert_allclose(np.asarray(out_decode[:, 0], np.float32),
+                               np.asarray(out_train[:, 0], np.float32),
+                               rtol=2e-2, atol=2e-3)

@@ -1,0 +1,117 @@
+"""Wavelet tree / matrix construction + queries vs naive numpy oracles.
+
+Covers all construction variants of paper Theorems 4.1, 4.2, 4.5:
+τ-chunked (all big_step backends), levelwise baseline, domain decomposition.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wavelet_matrix import (build_wavelet_matrix,
+                                       build_wavelet_matrix_levelwise,
+                                       wm_access, wm_rank, wm_select)
+from repro.core.wavelet_tree import (build_wavelet_tree,
+                                     build_wavelet_tree_dd,
+                                     build_wavelet_tree_levelwise, wt_access,
+                                     wt_rank, wt_select)
+
+
+def _check(seq, t, acc, rank, select, rng, tag):
+    n = len(seq)
+    assert np.array_equal(np.asarray(acc(t, jnp.arange(n))), seq), tag
+    for c in np.unique(rng.choice(seq, size=min(4, n))):
+        idx = np.unique(rng.integers(0, n + 1, 16))
+        r = np.asarray(rank(t, jnp.full(len(idx), int(c)), jnp.asarray(idx)))
+        expect = np.array([(seq[:i] == c).sum() for i in idx])
+        assert np.array_equal(r, expect), (tag, "rank", c)
+        occ = np.flatnonzero(seq == c)
+        ks = np.unique(rng.integers(0, len(occ), 8))
+        s = np.asarray(select(t, jnp.full(len(ks), int(c)), jnp.asarray(ks)))
+        assert np.array_equal(s, occ[ks]), (tag, "select", c)
+
+
+@given(st.integers(2, 3000), st.integers(2, 300),
+       st.sampled_from([2, 3, 8]), st.sampled_from(["compose", "radix", "xla"]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=12)
+def test_wavelet_tree_tau(n, sigma, tau, big_step, seed):
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    t = build_wavelet_tree(jnp.asarray(seq), sigma, tau=tau,
+                           big_step=big_step, sample_rate=128)
+    _check(seq, t, wt_access, wt_rank, wt_select, rng,
+           f"wt tau={tau} {big_step}")
+
+
+@given(st.integers(2, 2000), st.integers(2, 300), st.integers(0, 2**32 - 1))
+@settings(max_examples=10)
+def test_wavelet_tree_levelwise(n, sigma, seed):
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    t = build_wavelet_tree_levelwise(jnp.asarray(seq), sigma,
+                                     sample_rate=128)
+    _check(seq, t, wt_access, wt_rank, wt_select, rng, "wt levelwise")
+
+
+@given(st.integers(1, 200), st.sampled_from([2, 4, 8]),
+       st.integers(2, 100), st.integers(0, 2**32 - 1))
+@settings(max_examples=10)
+def test_wavelet_tree_domain_decomposition(m, chunks, sigma, seed):
+    rng = np.random.default_rng(seed)
+    n = m * chunks
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    t = build_wavelet_tree_dd(jnp.asarray(seq), sigma, chunks,
+                              sample_rate=128)
+    _check(seq, t, wt_access, wt_rank, wt_select, rng, f"wt dd P={chunks}")
+
+
+def test_tree_variants_identical_bitmaps():
+    """All construction variants must produce identical level bitmaps."""
+    rng = np.random.default_rng(5)
+    n, sigma = 1024, 97
+    seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+    ts = [build_wavelet_tree(seq, sigma, tau=3),
+          build_wavelet_tree(seq, sigma, tau=8, big_step="radix"),
+          build_wavelet_tree(seq, sigma, tau=4, big_step="xla"),
+          build_wavelet_tree_levelwise(seq, sigma),
+          build_wavelet_tree_dd(seq, sigma, 8)]
+    ref_words = np.asarray(ts[0].bitvectors.rank.words)
+    for t in ts[1:]:
+        assert np.array_equal(np.asarray(t.bitvectors.rank.words), ref_words)
+
+
+@given(st.integers(2, 3000), st.integers(2, 300),
+       st.sampled_from([2, 3, 8]), st.sampled_from(["compose", "radix", "xla"]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=12)
+def test_wavelet_matrix_tau(n, sigma, tau, big_step, seed):
+    rng = np.random.default_rng(seed)
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    t = build_wavelet_matrix(jnp.asarray(seq), sigma, tau=tau,
+                             big_step=big_step, sample_rate=128)
+    _check(seq, t, wm_access, wm_rank, wm_select, rng,
+           f"wm tau={tau} {big_step}")
+
+
+def test_matrix_variants_identical_bitmaps():
+    rng = np.random.default_rng(6)
+    n, sigma = 1024, 97
+    seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+    ts = [build_wavelet_matrix(seq, sigma, tau=3),
+          build_wavelet_matrix(seq, sigma, tau=8, big_step="radix"),
+          build_wavelet_matrix(seq, sigma, tau=4, big_step="xla"),
+          build_wavelet_matrix_levelwise(seq, sigma)]
+    ref_words = np.asarray(ts[0].bitvectors.rank.words)
+    for t in ts[1:]:
+        assert np.array_equal(np.asarray(t.bitvectors.rank.words), ref_words)
+
+
+@pytest.mark.parametrize("sigma", [2, 3, 4, 5])
+def test_tiny_alphabets(sigma):
+    rng = np.random.default_rng(1)
+    seq = rng.integers(0, sigma, 257).astype(np.uint32)
+    t = build_wavelet_tree(jnp.asarray(seq), sigma, tau=8, sample_rate=128)
+    _check(seq, t, wt_access, wt_rank, wt_select, rng, f"sigma={sigma}")
+    m = build_wavelet_matrix(jnp.asarray(seq), sigma, tau=8, sample_rate=128)
+    _check(seq, m, wm_access, wm_rank, wm_select, rng, f"wm sigma={sigma}")
