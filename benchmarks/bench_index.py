@@ -1,0 +1,79 @@
+"""Full-text index: build throughput (SA + BWT + WM) and query throughput
+(batched backward-search count, sampled-SA locate)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_corpus
+from repro.index import (build_fm_index, build_sharded_index,
+                         sample_patterns, suffix_array)
+
+from .common import record, save, time_fn
+
+
+def _patterns(toks: np.ndarray, num: int, max_len: int, pad: int):
+    pats, lens = sample_patterns(toks, num, max_len, pad,
+                                 miss_every=None, min_len=2)
+    return jnp.asarray(pats), jnp.asarray(lens)
+
+
+def run(n: int = 1 << 18, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    vocab = 4096
+    toks = np.asarray(make_corpus(n, vocab, seed=0), np.int64)
+
+    # --- suffix array construction alone (single shard of 2^14) ----------
+    shard = jnp.asarray(toks[:1 << 14], jnp.int32)
+    for backend in ("counting", "xla"):
+        t = time_fn(lambda: jax.block_until_ready(
+            suffix_array(shard, backend=backend, max_rounds=14)))
+        record(rows, f"suffix_array_n{1 << 14}_{backend}", t,
+               ktok_per_s=round((1 << 14) / t / 1e3, 1))
+
+    # --- full sharded build ----------------------------------------------
+    shard_bits = 13
+    t0 = time.perf_counter()
+    idx = build_sharded_index(toks, vocab, shard_bits=shard_bits)
+    jax.block_until_ready(jax.tree.leaves(idx.shards)[0])
+    t_build = time.perf_counter() - t0
+    record(rows, f"index_build_n{n}_sb{shard_bits}", t_build,
+           ktok_per_s=round(n / t_build / 1e3, 1),
+           bits_per_token=round(idx.bits_per_token(), 1),
+           num_shards=idx.num_shards)
+
+    # --- batched count (the 2·B·L·S rank workload) ------------------------
+    for batch in (64, 512):
+        pats, lens = _patterns(toks, batch, 8, pad=vocab)
+        f = jax.jit(lambda ix, p, l: ix.count(p, l))
+        t = time_fn(f, idx, pats, lens)
+        record(rows, f"index_count_b{batch}_n{n}", t,
+               patterns_per_s=round(batch / t, 1),
+               rank_calls=2 * batch * 8 * idx.num_shards)
+
+    # --- locate ------------------------------------------------------------
+    pats, lens = _patterns(toks, 64, 8, pad=vocab)
+    g = jax.jit(lambda ix, p, l: ix.locate(p, l, 4))
+    t = time_fn(g, idx, pats, lens)
+    record(rows, f"index_locate_b64_h4_n{n}", t,
+           patterns_per_s=round(64 / t, 1))
+
+    # --- single-shard FM-index count (no shard fan-out, larger text) ------
+    one = jnp.asarray(toks[:1 << 15], jnp.int32)
+    fm = build_fm_index(one, vocab)
+    pats, lens = _patterns(toks[:1 << 15], 256, 8, pad=vocab)
+    h = jax.jit(lambda f_, p, l: f_.count(p, l))
+    t = time_fn(h, fm, pats, lens)
+    record(rows, f"fm_count_single_n{1 << 15}_b256", t,
+           patterns_per_s=round(256 / t, 1))
+
+    if out is None:
+        save(rows, "index.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

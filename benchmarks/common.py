@@ -32,6 +32,10 @@ def record(rows: list, name: str, seconds: float, **derived) -> dict:
     return row
 
 
-def save(rows: list, fname: str) -> None:
-    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    (RESULTS_DIR / fname).write_text(json.dumps(rows, indent=1))
+def save(rows: list, fname: str) -> Path:
+    """Persist rows under results/bench/, creating the directory tree on
+    first run. numpy scalars in derived fields serialize as plain floats."""
+    path = RESULTS_DIR / fname
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rows, indent=1, default=float))
+    return path

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# One-stop CI entry point: tier-1 test suite, then the full-text index
+# build+query smoke so the new subsystem is exercised end-to-end.
+#
+#   bash scripts/ci.sh            # tests + index smoke
+#   bash scripts/ci.sh --bench    # also run the CI-sized benchmark pass
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== full-text index smoke =="
+python -m repro.launch.index --smoke
+
+if [[ "${1:-}" == "--bench" ]]; then
+    echo "== benchmarks (fast) =="
+    python -m benchmarks.run --fast
+fi

@@ -16,7 +16,8 @@ from .rank_select import (BinaryRank, BinarySelect, BitVector,
                           build_bitvector, build_generalized,
                           generalized_access, generalized_rank,
                           generalized_select, rank0, rank1, select0, select1)
-from .sort import radix_sort_stable, sort_pass, sort_permutation
+from .sort import (bucket_ranks, counting_rank, radix_sort_stable,
+                   sort_pass, sort_permutation)
 from .wavelet_matrix import (WaveletMatrix, build_wavelet_matrix,
                              build_wavelet_matrix_levelwise, num_levels,
                              reverse_bits, wm_access, wm_rank, wm_select)
@@ -32,7 +33,8 @@ __all__ = [
     "build_bitvector", "build_generalized", "generalized_access",
     "generalized_rank", "generalized_select", "rank0", "rank1",
     "select0", "select1",
-    "radix_sort_stable", "sort_pass", "sort_permutation",
+    "bucket_ranks", "counting_rank", "radix_sort_stable", "sort_pass",
+    "sort_permutation",
     "WaveletMatrix", "build_wavelet_matrix", "build_wavelet_matrix_levelwise",
     "num_levels", "reverse_bits", "wm_access", "wm_rank", "wm_select",
     "WaveletTree", "build_wavelet_tree", "build_wavelet_tree_dd",

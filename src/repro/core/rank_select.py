@@ -407,7 +407,9 @@ def generalized_select(g: GeneralizedRankSelect, c: jax.Array,
     """Position of the k-th (0-based) occurrence of c. Vectorized.
 
     Binary search over chunk_cum[:, c], then a per-symbol scan within the
-    chunk realized as a field-compare + prefix count.
+    chunk realized as a field-compare + prefix count. Out-of-range ``k``
+    (≥ count of c, or c absent) returns a clamped position in [0, n);
+    compare k against ``generalized_rank(g, c, n)`` to detect overflow.
     """
     c = jnp.asarray(c, jnp.int32)
     k = jnp.asarray(k, jnp.int32)
@@ -436,4 +438,4 @@ def generalized_select(g: GeneralizedRankSelect, c: jax.Array,
     # first position with cum == residual+1
     hit = cum == (residual[..., None] if k.ndim else residual) + 1
     pos_in_chunk = jnp.argmax(hit, axis=-1)
-    return chunk * g.chunk_syms + pos_in_chunk
+    return jnp.clip(chunk * g.chunk_syms + pos_in_chunk, 0, g.n - 1)

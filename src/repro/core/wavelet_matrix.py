@@ -173,6 +173,9 @@ def wm_select(wm: WaveletMatrix, c: jax.Array, k: jax.Array) -> jax.Array:
 
     Descend to find the start offset of c's block at the deepest level, then
     ascend converting block-relative ranks back to positions via select.
+    Out-of-range ``k`` (≥ count of c, or c absent) returns a clamped
+    position in [0, n) rather than garbage — callers that need to detect
+    overflow should compare k against ``wm_rank(wm, c, n)`` first.
     """
     c = jnp.asarray(c, jnp.int32)
     k = jnp.asarray(k, jnp.int32)
@@ -189,4 +192,5 @@ def wm_select(wm: WaveletMatrix, c: jax.Array, k: jax.Array) -> jax.Array:
         pos = jnp.where(bit == 0,
                         select0(bv.rank, bv.sel0, pos),
                         select1(bv.rank, bv.sel1, pos - wm.zeros[l]))
+        pos = jnp.clip(pos, 0, wm.n - 1)
     return pos

@@ -1,0 +1,30 @@
+"""Succinct full-text index subsystem (suffix array → BWT → FM-index).
+
+The serving consumer of the paper's structures: substring ``count`` /
+``locate`` over sharded token corpora, where every backward-search step is
+a wavelet-matrix ``rank`` and every locate step an ``access`` + ``rank``.
+
+Build pipeline (all on the paper's primitives):
+
+1. ``suffix_array``  — prefix doubling; each round = one stable integer
+   sort (``core.sort.radix_sort_stable``) + one prefix-sum re-rank.
+2. ``bwt_encode``    — BWT gather + C[] boundary table (histogram + scan).
+3. ``build_fm_index``— wavelet matrix over the BWT (Theorem 4.5) +
+   sampled-SA locate directories.
+4. ``build_sharded_index`` — per-shard indexes stacked leaf-wise, so a
+   pattern batch against the whole corpus is one vmapped query.
+"""
+from .bwt import (SENTINEL_SHIFT, append_sentinel, bwt_decode, bwt_encode,
+                  bwt_from_sa, symbol_boundaries)
+from .fm_index import FMIndex, build_fm_index, fm_count, fm_locate
+from .patterns import sample_patterns
+from .sharded import ShardedTextIndex, build_sharded_index
+from .suffix_array import doubling_round, suffix_array, suffix_array_naive
+
+__all__ = [
+    "SENTINEL_SHIFT", "append_sentinel", "bwt_decode", "bwt_encode",
+    "bwt_from_sa", "symbol_boundaries",
+    "FMIndex", "build_fm_index", "fm_count", "fm_locate",
+    "ShardedTextIndex", "build_sharded_index", "sample_patterns",
+    "doubling_round", "suffix_array", "suffix_array_naive",
+]

@@ -1,0 +1,94 @@
+"""Burrows–Wheeler transform + C[] boundary table from the suffix array.
+
+Given the suffix array of ``T·$`` ($ = unique smallest terminator), the BWT
+is a single gather — ``bwt[j] = T$[(sa[j] − 1) mod m]`` — and the C table
+(``C[c]`` = # of symbols < c) is a histogram + exclusive prefix sum, both
+O(n) work / O(log n) depth with the paper's primitives.
+
+Alphabet convention used by the whole index subsystem: raw symbols in
+[0, σ) are shifted up by one and the terminator takes id 0, so the working
+alphabet is [0, σ] and the wavelet matrix over the BWT has ⌈log₂(σ+1)⌉
+levels. ``SENTINEL_SHIFT`` documents the +1.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.scan import exclusive_sum
+
+from .suffix_array import suffix_array
+
+_I32 = jnp.int32
+
+#: raw symbol c is stored as c + SENTINEL_SHIFT; the terminator is 0.
+SENTINEL_SHIFT = 1
+
+
+def append_sentinel(seq: jax.Array) -> jax.Array:
+    """``T → T'·$``: shift symbols up by one, append terminator id 0."""
+    shifted = jnp.asarray(seq, _I32) + SENTINEL_SHIFT
+    return jnp.concatenate([shifted, jnp.zeros((1,), _I32)])
+
+
+def bwt_from_sa(text: jax.Array, sa: jax.Array) -> jax.Array:
+    """``bwt[j] = text[(sa[j] - 1) mod len(text)]`` — one vectorized gather."""
+    m = text.shape[0]
+    prev = jnp.where(sa == 0, m - 1, sa - 1)
+    return text[prev]
+
+
+def symbol_boundaries(text: jax.Array, sigma_work: int) -> jax.Array:
+    """C table over the working alphabet: ``C[c]`` = # of symbols < c.
+
+    Returns shape (sigma_work + 1,) so ``C[c+1] - C[c]`` is the count of c
+    and ``C[sigma_work]`` = m. Histogram + exclusive sum (paper Section 2).
+    """
+    hist = jnp.zeros((sigma_work,), _I32).at[
+        jnp.asarray(text, _I32)].add(1, mode="drop")
+    cum = exclusive_sum(hist)
+    total = jnp.asarray(text.shape[0], _I32)
+    return jnp.concatenate([cum, total[None]])
+
+
+def bwt_encode(seq: jax.Array, sigma: int | None = None, *,
+               backend: str = "counting"):
+    """Full BWT pipeline for raw symbols in [0, σ).
+
+    Returns ``(bwt, sa, C)`` over the working alphabet [0, σ]: ``sa`` is
+    the suffix array of the terminated text (length n+1), ``bwt`` its
+    Burrows–Wheeler transform, ``C`` the (σ+2,)-entry boundary table.
+    """
+    seq = jnp.asarray(seq)
+    if sigma is None:
+        sigma = int(jnp.max(seq)) + 1 if seq.size else 1
+    sigma_work = sigma + SENTINEL_SHIFT
+    text = append_sentinel(seq)
+    sa = suffix_array(text, sigma_work, backend=backend)
+    bwt = bwt_from_sa(text, sa)
+    C = symbol_boundaries(text, sigma_work)
+    return bwt, sa, C
+
+
+def bwt_decode(bwt: jax.Array, C: jax.Array) -> jax.Array:
+    """Invert the BWT by repeated LF-mapping (numpy-grade reference path;
+    O(m) sequential — for tests and the CLI round-trip check, not serving).
+    """
+    import numpy as np
+    b = np.asarray(bwt)
+    m = len(b)
+    Cn = np.asarray(C)
+    # occ[j] = # of b[j] among b[:j]  (stable per-symbol arrival order)
+    occ = np.zeros(m, np.int64)
+    seen: dict = {}
+    for j, c in enumerate(b):
+        occ[j] = seen.get(int(c), 0)
+        seen[int(c)] = occ[j] + 1
+    lf = Cn[b] + occ
+    out = np.empty(m, b.dtype)
+    j = 0                              # row of the terminator-rotated text
+    for t in range(m - 1, -1, -1):
+        out[t] = b[j]
+        j = lf[j]
+    # out is T'·$ rotated so $ is last; strip terminator, undo the shift
+    return jnp.asarray(out[out != 0] - SENTINEL_SHIFT, _I32)

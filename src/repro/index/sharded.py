@@ -1,0 +1,150 @@
+"""Shard-parallel full-text index: FM-index per shard, stacked leaf-wise.
+
+Mirrors ``CompressedCorpus``'s layout exactly: every shard's ``FMIndex``
+pytree has identical static geometry (power-of-two shard size, shared
+alphabet), so the shards stack leaf-wise into ONE pytree with a leading
+``(num_shards,)`` axis, and a batch of patterns against all shards is a
+single ``vmap``-over-shards of the vmapped-over-patterns backward search —
+one jitted kernel for the whole corpus.
+
+The last shard is padded with the out-of-alphabet symbol σ (indexed with an
+alphabet of σ+1), which cannot appear in a query, so padding never produces
+phantom matches. Known limitation (by construction, same as any sharded
+inverted index): a match *spanning a shard boundary* is not found; choose
+``shard_bits`` ≥ document size or align shards to document boundaries
+(``make_corpus`` emits an EOS every ``doc_len`` tokens) when that matters.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fm_index import FMIndex, build_fm_index, fm_count, fm_locate
+
+_I32 = jnp.int32
+
+
+@jax.tree_util.register_dataclass
+@dataclass(frozen=True)
+class ShardedTextIndex:
+    """Stacked per-shard FM-indexes + corpus geometry."""
+    shards: FMIndex                # every leaf has a leading (S,) axis
+    n: int = field(metadata=dict(static=True))       # true corpus length
+    sigma: int = field(metadata=dict(static=True))   # raw vocab size
+    shard_bits: int = field(metadata=dict(static=True))
+
+    @property
+    def shard_size(self) -> int:
+        return 1 << self.shard_bits
+
+    @property
+    def num_shards(self) -> int:
+        return jax.tree.leaves(self.shards)[0].shape[0]
+
+    def shard(self, s: jax.Array) -> FMIndex:
+        return jax.tree.map(lambda l: l[s], self.shards)
+
+    def bits_per_token(self) -> float:
+        total = sum(l.size * l.dtype.itemsize * 8
+                    for l in jax.tree.leaves(self.shards))
+        return total / max(1, self.n)
+
+    # ------------------------------------------------------------------
+    def _sanitize(self, patterns: jax.Array, lengths: jax.Array):
+        """Coerce shapes and mask symbols outside the *corpus* vocabulary.
+
+        Shards are indexed with the widened alphabet σ+1 (pad symbol σ is
+        in-alphabet for the per-shard FM-index), so out-of-vocab query
+        symbols — σ included — are rewritten to -1 here, which the
+        backward search treats as match-nothing. Without this, a query
+        containing σ would count the tail shard's padding. Zero-length
+        patterns become a 1-symbol match-nothing pattern: the empty query
+        counts 0 at this layer (an unrestricted SA range over every shard
+        — padding included — is never what a corpus caller wants).
+        """
+        patterns = jnp.atleast_2d(jnp.asarray(patterns, _I32))
+        lengths = jnp.atleast_1d(jnp.asarray(lengths, _I32))
+        in_vocab = (patterns >= 0) & (patterns < self.sigma)
+        patterns = jnp.where(in_vocab, patterns, jnp.asarray(-1, _I32))
+        empty = lengths <= 0
+        patterns = patterns.at[:, 0].set(
+            jnp.where(empty, jnp.asarray(-1, _I32), patterns[:, 0]))
+        return patterns, jnp.where(empty, 1, lengths)
+
+    def count(self, patterns: jax.Array, lengths: jax.Array) -> jax.Array:
+        """Total matches per pattern across all shards. (B,) int32."""
+        return jnp.sum(self.count_by_shard(patterns, lengths), axis=0)
+
+    def count_by_shard(self, patterns: jax.Array,
+                       lengths: jax.Array) -> jax.Array:
+        """(S, B) per-shard match counts (distribution analytics).
+
+        One vmap over the stacked shard axis of the per-shard batched
+        backward search.
+        """
+        patterns, lengths = self._sanitize(patterns, lengths)
+        return jax.vmap(lambda fm: fm_count(fm, patterns, lengths))(
+            self.shards)
+
+    def locate(self, patterns: jax.Array, lengths: jax.Array,
+               max_hits_per_shard: int = 8) -> jax.Array:
+        """Global match positions, (B, S·max_hits_per_shard) int32.
+
+        Per-shard local hits are rebased by ``s · shard_size``; slots past
+        each shard's true hit count are -1. Sorted ascending per pattern
+        with the -1 padding swept to the back.
+        """
+        patterns, lengths = self._sanitize(patterns, lengths)
+        S = self.num_shards
+
+        def per_shard(fm, base):
+            def one(p, l):
+                local = fm_locate(fm, p, l, max_hits_per_shard)
+                return jnp.where(local >= 0, local + base,
+                                 jnp.asarray(-1, _I32))
+            return jax.vmap(one)(patterns, lengths)        # (B, H)
+
+        bases = jnp.arange(S, dtype=_I32) << self.shard_bits
+        hits = jax.vmap(per_shard)(self.shards, bases)     # (S, B, H)
+        flat = jnp.transpose(hits, (1, 0, 2)).reshape(patterns.shape[0], -1)
+        big = jnp.where(flat < 0, jnp.asarray(jnp.iinfo(jnp.int32).max,
+                                              _I32), flat)
+        out = jnp.sort(big, axis=-1)
+        return jnp.where(out == jnp.iinfo(jnp.int32).max,
+                         jnp.asarray(-1, _I32), out)
+
+
+def build_sharded_index(tokens: np.ndarray, sigma: int, *,
+                        shard_bits: int = 14, sample_rate: int = 32,
+                        tau: int = 8, big_step: str = "compose",
+                        bv_sample_rate: int = 512,
+                        backend: str = "counting") -> ShardedTextIndex:
+    """Shard the token stream and run the full per-shard build pipeline
+    (suffix array → BWT → wavelet matrix → SA samples) shard by shard,
+    then stack the resulting pytrees leaf-wise.
+
+    Each shard build is independent — on a multi-chip mesh they pmap; here
+    they loop. The tail shard is padded with the out-of-alphabet symbol σ.
+    """
+    n = int(len(tokens))
+    shard_size = 1 << shard_bits
+    num_shards = max(1, (n + shard_size - 1) // shard_size)
+    pad = num_shards * shard_size - n
+    toks = np.asarray(tokens, np.int64)
+    if toks.size and (toks.min() < 0 or toks.max() >= sigma):
+        raise ValueError(f"tokens outside [0, {sigma})")
+    if pad:
+        toks = np.concatenate([toks, np.full(pad, sigma, np.int64)])
+    shards_np = toks.reshape(num_shards, shard_size)
+
+    built = [build_fm_index(jnp.asarray(s, _I32), sigma + 1,
+                            sample_rate=sample_rate, tau=tau,
+                            big_step=big_step,
+                            bv_sample_rate=bv_sample_rate, backend=backend)
+             for s in shards_np]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    return ShardedTextIndex(shards=stacked, n=n, sigma=sigma,
+                            shard_bits=shard_bits)

@@ -19,7 +19,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.configs.base import (ARCHITECTURES, SHAPES, get_config,  # noqa: E402
                                 supports_shape)
-from repro.launch.mesh import dp_axes, make_production_mesh  # noqa: E402
+from repro.launch.mesh import (dp_axes, make_production_mesh,  # noqa: E402
+                               set_mesh)
 from repro.models.model import (abstract_cache, abstract_params,  # noqa: E402
                                 build_model, cache_specs, param_specs)
 from repro.optim.adamw import abstract_opt_state, adamw_update  # noqa: E402
@@ -230,7 +231,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     specs = input_specs(cfg, shape)
 
     t0 = time.time()
-    mesh_ctx = jax.set_mesh(mesh)
+    mesh_ctx = set_mesh(mesh)
     mesh_ctx.__enter__()
     if shape.kind == "train":
         step = make_train_step(model, grad_accum=GRAD_ACCUM.get(arch, 1))

@@ -16,7 +16,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import get_config
 from repro.data import TokenBatcher, build_compressed_corpus, make_corpus
-from repro.launch.mesh import dp_axes, make_host_mesh
+from repro.launch.mesh import dp_axes, make_host_mesh, set_mesh
 from repro.models import shard_ctx
 from repro.models.model import build_model, param_specs
 from repro.train import Trainer
@@ -66,7 +66,7 @@ def main():
         mesh = make_host_mesh()
         sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
         shard_ctx.set_mesh_context(dp_axes(mesh), sizes)
-        ctx = jax.set_mesh(mesh)
+        ctx = set_mesh(mesh)
         ctx.__enter__()
 
     trainer = Trainer(

@@ -1,0 +1,97 @@
+"""Edge cases for the σ-ary select paths: out-of-range k, alphabets that
+don't fill a power of two, and length-1 / padding-dominated inputs.
+
+Pure-numpy oracles — runs in minimal environments without hypothesis.
+Contract pinned here: out-of-range ``k`` (k ≥ count, or symbol absent)
+returns a *clamped position in [0, n)*, never out-of-bounds garbage;
+callers detect overflow by comparing k against rank(c, n).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (build_generalized, build_wavelet_matrix,
+                        generalized_rank, generalized_select, wm_access,
+                        wm_rank, wm_select)
+
+
+def test_wm_select_out_of_range_k_is_clamped():
+    rng = np.random.default_rng(0)
+    n = 100
+    seq = rng.integers(0, 5, n)
+    wm = build_wavelet_matrix(jnp.asarray(seq), 5)
+    occ = np.flatnonzero(seq == 2)
+    got = np.asarray(wm_select(wm, 2, jnp.arange(len(occ))))
+    assert np.array_equal(got, occ)
+    oob = np.asarray(wm_select(wm, 2, jnp.asarray(
+        [len(occ), len(occ) + 5, 10 ** 6])))
+    assert ((oob >= 0) & (oob < n)).all()
+    # absent symbol (6 ≥ σ but < 2^nbits): in-range, no crash
+    absent = np.asarray(wm_select(wm, 6, jnp.asarray([0, 3])))
+    assert ((absent >= 0) & (absent < n)).all()
+
+
+def test_wm_sigma_not_power_of_two():
+    rng = np.random.default_rng(1)
+    for sigma in (3, 5, 1000):
+        n = 200
+        seq = rng.integers(0, sigma, n)
+        wm = build_wavelet_matrix(jnp.asarray(seq), sigma)
+        assert np.array_equal(np.asarray(wm_access(wm, jnp.arange(n))), seq)
+        for c in np.unique(seq)[:4]:
+            idx = np.arange(0, n + 1, 17)
+            got = np.asarray(wm_rank(wm, jnp.full(len(idx), int(c)),
+                                     jnp.asarray(idx)))
+            want = np.array([(seq[:i] == c).sum() for i in idx])
+            assert np.array_equal(got, want), (sigma, c)
+            occ = np.flatnonzero(seq == c)
+            got = np.asarray(wm_select(wm, int(c), jnp.arange(len(occ))))
+            assert np.array_equal(got, occ), (sigma, c)
+
+
+def test_wm_length_one():
+    wm = build_wavelet_matrix(jnp.asarray(np.array([3])), 5)
+    assert int(wm_access(wm, jnp.int32(0))) == 3
+    assert int(wm_rank(wm, jnp.int32(3), jnp.int32(1))) == 1
+    assert int(wm_select(wm, jnp.int32(3), jnp.int32(0))) == 0
+    # out-of-range k on a 1-element sequence stays in [0, 1)
+    assert int(wm_select(wm, jnp.int32(3), jnp.int32(7))) == 0
+    assert int(wm_select(wm, jnp.int32(4), jnp.int32(0))) == 0
+
+
+def test_generalized_select_out_of_range_and_sparse_alphabet():
+    rng = np.random.default_rng(2)
+    n = 200
+    # width-4 fields but only symbols 0..9 occur: "σ not a power of two"
+    seq = rng.integers(0, 10, n).astype(np.uint32)
+    g = build_generalized(jnp.asarray(seq), 4, n)
+    for c in (0, 3, 9):
+        occ = np.flatnonzero(seq == c)
+        got = np.asarray(generalized_select(g, jnp.full(len(occ), c),
+                                            jnp.arange(len(occ))))
+        assert np.array_equal(got, occ), c
+    oob = np.asarray(generalized_select(
+        g, jnp.asarray([3, 3, 15]),
+        jnp.asarray([int((seq == 3).sum()), 10 ** 6, 0])))
+    assert ((oob >= 0) & (oob < n)).all()
+    # symbol 15 never occurs; rank confirms, select stays clamped
+    assert int(generalized_rank(g, jnp.int32(15), jnp.int32(n))) == 0
+
+
+def test_generalized_length_one_and_scalar_queries():
+    g = build_generalized(jnp.asarray(np.array([2], np.uint32)), 4, 1)
+    assert int(generalized_rank(g, jnp.int32(2), jnp.int32(1))) == 1
+    assert int(generalized_select(g, jnp.int32(2), jnp.int32(0))) == 0
+    # out-of-range k clamps inside the 1-symbol sequence
+    assert int(generalized_select(g, jnp.int32(2), jnp.int32(5))) == 0
+    assert int(generalized_select(g, jnp.int32(7), jnp.int32(0))) == 0
+
+
+def test_generalized_rank_beyond_padding():
+    """Chunk padding (n not a multiple of chunk_syms) must stay invisible."""
+    rng = np.random.default_rng(3)
+    n = 130                                  # chunk_syms=128 → 126 pad slots
+    seq = rng.integers(0, 4, n).astype(np.uint32)
+    g = build_generalized(jnp.asarray(seq), 2, n)
+    for c in range(4):
+        assert int(generalized_rank(g, jnp.int32(c), jnp.int32(n))) == \
+            int((seq == c).sum()), c
