@@ -1,0 +1,88 @@
+"""Range-analytics engine: build throughput + per-op batched query
+throughput (quantile / count / top-k / distinct), single-shard fused
+Pallas quantile kernel vs the XLA descent, sharded fan-out scaling."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics import build_sharded_analytics, range_quantile
+from repro.data import make_corpus
+from repro.kernels.ops import wm_quantile_batch
+
+from .common import record, save, time_fn
+
+
+def _queries(n: int, num: int, seed: int = 1):
+    rng = np.random.default_rng(seed)
+    lo = rng.integers(0, max(1, n - 1), num).astype(np.int32)
+    hi = np.minimum(lo + rng.integers(1, max(2, n // 4), num), n)
+    k = rng.integers(0, np.maximum(hi - lo, 1)).astype(np.int32)
+    return jnp.asarray(lo), jnp.asarray(hi.astype(np.int32)), jnp.asarray(k)
+
+
+def run(n: int = 1 << 18, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    vocab = 4096
+    toks = np.asarray(make_corpus(n, vocab, seed=0), np.int64)
+
+    # --- build ------------------------------------------------------------
+    t0 = time.perf_counter()
+    eng = build_sharded_analytics(toks, vocab, shard_bits=14)
+    jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
+    t_build = time.perf_counter() - t0
+    record(rows, f"analytics_build_n{n}_sb14", t_build,
+           ktok_per_s=round(n / t_build / 1e3, 1),
+           bits_per_token=round(eng.bits_per_token(), 1),
+           num_shards=eng.num_shards)
+
+    # --- per-op batched throughput ---------------------------------------
+    for batch in (256, 1024):
+        lo, hi, k = _queries(n, batch)
+        sym_lo = jnp.asarray(np.arange(batch, dtype=np.int32) % vocab)
+        sym_hi = jnp.minimum(sym_lo + 64, vocab)
+
+        q = jax.jit(lambda e, a, b, c: e.range_quantile(a, b, c))
+        t = time_fn(q, eng, lo, hi, k)
+        record(rows, f"analytics_quantile_b{batch}_n{n}", t,
+               queries_per_s=round(batch / t, 1))
+
+        c = jax.jit(lambda e, a, b, s0, s1: e.range_count(a, b, s0, s1))
+        t = time_fn(c, eng, lo, hi, sym_lo, sym_hi)
+        record(rows, f"analytics_count_b{batch}_n{n}", t,
+               queries_per_s=round(batch / t, 1))
+
+    lo, hi, k = _queries(n, 256)
+    tk = jax.jit(lambda e, a, b: e.range_topk(a, b, 8))
+    t = time_fn(tk, eng, lo, hi)
+    record(rows, f"analytics_topk8_b256_n{n}", t,
+           queries_per_s=round(256 / t, 1))
+
+    d = jax.jit(lambda e, a, b: e.range_distinct(a, b))
+    t = time_fn(d, eng, lo, hi)
+    record(rows, f"analytics_distinct_b256_n{n}", t,
+           queries_per_s=round(256 / t, 1))
+
+    # --- fused Pallas quantile kernel vs XLA descent (one shard) ----------
+    wm = eng.shard(0)
+    m = wm.n
+    lo1, hi1, k1 = _queries(m, 1024, seed=2)
+    f_fused = jax.jit(lambda w, a, b, c: wm_quantile_batch(w, a, b, c))
+    t = time_fn(f_fused, wm, lo1, hi1, k1)
+    record(rows, f"quantile_kernel_fused_b1024_m{m}", t,
+           queries_per_s=round(1024 / t, 1))
+    f_xla = jax.jit(lambda w, a, b, c: range_quantile(w, a, b, c))
+    t = time_fn(f_xla, wm, lo1, hi1, k1)
+    record(rows, f"quantile_xla_b1024_m{m}", t,
+           queries_per_s=round(1024 / t, 1))
+
+    if out is None:
+        save(rows, "analytics.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,9 +11,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (bench_corpus_store, bench_huffman, bench_index,
-               bench_kernels, bench_multiary, bench_rank_select,
-               bench_wavelet_matrix, bench_wavelet_tree)
+from . import (bench_analytics, bench_corpus_store, bench_huffman,
+               bench_index, bench_kernels, bench_multiary,
+               bench_rank_select, bench_wavelet_matrix, bench_wavelet_tree)
 from .common import save
 
 SUITES = {
@@ -25,6 +25,7 @@ SUITES = {
     "kernels": ("kernels.json", bench_kernels.run),
     "corpus": ("corpus_store.json", bench_corpus_store.run),
     "index": ("index.json", bench_index.run),
+    "analytics": ("analytics.json", bench_analytics.run),
 }
 
 

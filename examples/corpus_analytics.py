@@ -65,6 +65,26 @@ def main():
     print("decoded window around midpoint:", window.tolist())
     assert np.array_equal(window, toks[n // 2 - 8:n // 2 + 8]
                           .astype(window.dtype))
+
+    # 6. range analytics (repro.analytics over the same shards): median
+    #    token per region, band counts, per-region vocabulary diversity,
+    #    heaviest tokens of a slice — all O(logσ)-ish queries, no decode
+    q = n // 4
+    los = jnp.asarray([0, q, 2 * q, 3 * q]); his = los + q
+    med = np.asarray(corpus.range_quantile(los, his, (his - los) // 2))
+    print(f"\nper-quarter median token: {med.tolist()}")
+    band = np.asarray(corpus.range_count(los, his, 0, 256))
+    print(f"tokens with id < 256 per quarter: {band.tolist()}")
+    div = np.asarray(jax.jit(lambda a, b: corpus.range_distinct(a, b))(los, his))
+    print(f"distinct tokens per quarter: {div.tolist()}")
+    syms, cnts = corpus.range_topk(q, 3 * q, 3)
+    print(f"top-3 tokens of the middle half: "
+          f"{list(zip(np.asarray(syms).tolist(), np.asarray(cnts).tolist()))}")
+    for i in range(4):
+        seg = toks[int(los[i]):int(his[i])]
+        assert med[i] == np.sort(seg)[len(seg) // 2]
+        assert band[i] == int((seg < 256).sum())
+        assert div[i] == len(np.unique(seg))
     print("\nall analytics verified against the raw stream ✓")
 
 

@@ -15,6 +15,9 @@ python -m pytest -x -q
 echo "== full-text index smoke =="
 python -m repro.launch.index --smoke
 
+echo "== range analytics smoke =="
+python -m repro.launch.analytics --smoke
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== benchmarks (fast) =="
     python -m benchmarks.run --fast

@@ -1,0 +1,30 @@
+"""Range-query analytics engine over wavelet matrices.
+
+The downstream workload that motivates the paper's fast construction:
+range quantile / orthogonal range counting / top-k / distinct-count in
+O(logσ) rank probes per query, batched with ``vmap`` and fanned across
+corpus shards by ``ShardedAnalytics`` (exact cross-shard reductions —
+count-then-refine quantiles, shard-vector top-k frontier, histogram-union
+distinct).
+
+Single-matrix ops live in ``range_ops``; the sharded serving layer in
+``engine``; the fused Pallas quantile kernel in ``repro.kernels``
+(``wm_quantile_batch``).
+"""
+from .engine import (ShardedAnalytics, build_sharded_analytics,
+                     local_ranges, sharded_range_count,
+                     sharded_range_distinct, sharded_range_histogram,
+                     sharded_range_quantile, sharded_range_topk,
+                     sharded_range_topk_greedy)
+from .range_ops import (range_count, range_distinct, range_histogram,
+                        range_quantile, range_topk, range_topk_greedy,
+                        topk_slot_budget)
+
+__all__ = [
+    "ShardedAnalytics", "build_sharded_analytics", "local_ranges",
+    "sharded_range_count", "sharded_range_distinct",
+    "sharded_range_histogram", "sharded_range_quantile",
+    "sharded_range_topk", "sharded_range_topk_greedy",
+    "range_count", "range_distinct", "range_histogram", "range_quantile",
+    "range_topk", "range_topk_greedy", "topk_slot_budget",
+]

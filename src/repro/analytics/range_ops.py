@@ -1,0 +1,327 @@
+"""Range-query ops over a single wavelet matrix.
+
+These are the queries that justify building wavelet trees at all (cf.
+"Wavelet Trees Meet Suffix Trees", arXiv:1408.6182): every op descends the
+``nbits`` levels of the matrix, spending two ``rank0`` probes per level on
+the position-interval boundaries, so a query costs O(logσ) directory
+lookups regardless of range width.
+
+All position ranges are half-open ``[lo, hi)`` over the original sequence;
+symbol ranges are half-open ``[sym_lo, sym_hi)``. Every op is pure jnp on
+static-shape state, so it jits and vmaps over query batches:
+
+* ``range_quantile``  — k-th smallest symbol in the range (k 0-based).
+* ``range_count``     — # of positions whose symbol falls in a symbol band
+                        (orthogonal range counting: both symbol boundaries
+                        walk down together).
+* ``range_topk``      — heaviest-k symbols by occurrence count. Exact, via
+                        the breadth-first range histogram + ``lax.top_k``
+                        (O(σ) *vector* work, no sequential loop).
+* ``range_topk_greedy`` — the classic greedy node expansion with a fixed
+                        pop budget and slot capacity (the heap is a masked
+                        argmax, so the loop is jittable): O(budget·logσ)
+                        sequential pops independent of σ — the scalable
+                        path for huge alphabets. Exact whenever the budget
+                        covers every node outweighing the k-th answer
+                        (always true at ``budget ≥ 2^(nbits+1)``; the
+                        default heuristic budget is exact on skewed
+                        distributions, best-effort on near-uniform ones).
+* ``range_distinct``  — # of distinct symbols (breadth-first descent; O(σ)
+                        vector work — see ``range_histogram``).
+
+``range_quantile``/``range_count`` broadcast over batched ``lo``/``hi``
+arrays directly; the top-k/histogram/distinct ops are written for one
+scalar query — ``jax.vmap`` them over batches, as
+``repro.analytics.engine`` does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wavelet_matrix import (WaveletMatrix, wm_child_interval,
+                                       wm_interval_zeros)
+
+_I32 = jnp.int32
+
+
+def _clip_range(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array):
+    lo = jnp.clip(jnp.asarray(lo, _I32), 0, wm.n)
+    hi = jnp.clip(jnp.asarray(hi, _I32), 0, wm.n)
+    hi = jnp.maximum(hi, lo)
+    return lo, hi
+
+
+# --------------------------------------------------------------------------
+# range quantile
+# --------------------------------------------------------------------------
+
+def range_quantile(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array,
+                   k: jax.Array) -> jax.Array:
+    """k-th smallest symbol (0-based) among positions [lo, hi).
+
+    At each level the branch compares ``k`` against the number of zeros in
+    the current interval: fewer than k zeros → the answer's bit is 1 and k
+    shifts down by the zero count. ``k`` is clamped into [0, hi-lo);
+    an empty range returns -1. Broadcasts over batched lo/hi/k.
+    """
+    lo, hi = _clip_range(wm, lo, hi)
+    k = jnp.clip(jnp.asarray(k, _I32), 0, jnp.maximum(hi - lo - 1, 0))
+    empty = hi <= lo
+    sym = jnp.zeros_like(lo)
+    for l in range(wm.nbits):
+        lo0, hi0 = wm_interval_zeros(wm, l, lo, hi)
+        z = hi0 - lo0
+        bit = (k >= z).astype(_I32)
+        sym = (sym << 1) | bit
+        k = jnp.where(bit == 1, k - z, k)
+        lo, hi = wm_child_interval(wm, l, lo, hi, bit, lo0, hi0)
+    return jnp.where(empty, jnp.asarray(-1, _I32), sym)
+
+
+# --------------------------------------------------------------------------
+# orthogonal range counting
+# --------------------------------------------------------------------------
+
+def _count_below(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array,
+                 sym: jax.Array) -> jax.Array:
+    """# of positions in [lo, hi) whose symbol is < sym (sym clamped to
+    [0, 2^nbits]). One descent: whenever sym's bit is 1, everything in the
+    zero-branch is smaller — add the interval's zero count and go right."""
+    top = 1 << wm.nbits
+    s = jnp.clip(jnp.asarray(sym, _I32), 0, top)
+    full = s >= top
+    total = hi - lo
+    acc = jnp.zeros_like(lo)
+    for l in range(wm.nbits):
+        bit = (s >> (wm.nbits - 1 - l)) & 1
+        lo0, hi0 = wm_interval_zeros(wm, l, lo, hi)
+        acc = acc + jnp.where(bit == 1, hi0 - lo0, 0)
+        lo, hi = wm_child_interval(wm, l, lo, hi, bit, lo0, hi0)
+    return jnp.where(full, total, acc)
+
+
+def range_count(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array,
+                sym_lo: jax.Array, sym_hi: jax.Array) -> jax.Array:
+    """# of positions in [lo, hi) whose symbol lies in [sym_lo, sym_hi).
+
+    Both symbol boundaries walk the levels together (two interval states
+    sharing the descent), so the cost is O(logσ) like a single rank.
+    Broadcasts over batched arguments.
+    """
+    lo, hi = _clip_range(wm, lo, hi)
+    below_hi = _count_below(wm, lo, hi, sym_hi)
+    below_lo = _count_below(wm, lo, hi, sym_lo)
+    return jnp.maximum(below_hi - below_lo, 0)
+
+
+# --------------------------------------------------------------------------
+# range top-k (greedy frontier expansion)
+# --------------------------------------------------------------------------
+
+def topk_slot_budget(nbits: int, k: int) -> tuple[int, int]:
+    """Default (pop budget, slot capacity) for the greedy expansion.
+
+    Popping the heaviest node never misses (a child never outweighs its
+    parent), and on skewed distributions the k answers surface within
+    ~k·logσ pops (expanding only their root paths). Slots are append-only
+    (each internal pop appends two children), so capacity is 1 + 2·pops.
+    Near-uniform distributions can need up to 2^(nbits+1) pops for
+    exactness — pass an explicit ``budget`` for that regime, or use the
+    exact ``range_topk``.
+    """
+    iters = k * (nbits + 1)
+    return iters, 2 * iters + 1
+
+
+def topk_from_histogram(hist: jax.Array, k: int):
+    """(syms, counts) of the k largest entries of ``hist`` (…, σ) along
+    the last axis, descending, (-1, 0)-padded past the non-zero entries.
+    Ties break toward the smaller symbol. Shared by the single-matrix and
+    sharded (histogram-sum) top-k paths."""
+    kk = min(k, hist.shape[-1])
+    cnts, syms = jax.lax.top_k(hist, kk)
+    syms = jnp.where(cnts > 0, syms.astype(_I32), jnp.asarray(-1, _I32))
+    cnts = cnts.astype(_I32)
+    if kk < k:
+        pad = hist.shape[:-1] + (k - kk,)
+        syms = jnp.concatenate([syms, jnp.full(pad, -1, _I32)], axis=-1)
+        cnts = jnp.concatenate([cnts, jnp.zeros(pad, _I32)], axis=-1)
+    return syms, cnts
+
+
+def range_topk(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array, k: int):
+    """The k most frequent symbols in [lo, hi) with their counts. Exact.
+
+    Returns ``(syms, counts)``, each (k,), ordered by descending count;
+    slots past the number of distinct symbols in the range are (-1, 0).
+    Ties break toward the smaller symbol. ``k`` is static; ``lo``/``hi``
+    are scalar — vmap over query batches.
+
+    Implementation: breadth-first range histogram + ``lax.top_k`` — O(σ)
+    vector work with no sequential dependence, which on a vector machine
+    beats the pointer-chasing greedy walk up to very large σ. For alphabets
+    where O(σ) per query is unaffordable, see ``range_topk_greedy``.
+    """
+    return topk_from_histogram(range_histogram(wm, lo, hi), k)
+
+
+def range_topk_greedy(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array,
+                      k: int, budget: int | None = None):
+    """Greedy best-first top-k with a fixed pop budget. Same contract as
+    ``range_topk``; cost O(budget) sequential pops of O(logσ) work,
+    independent of σ.
+
+    The frontier is a fixed array of (level, symbol-prefix, interval)
+    slots; each iteration pops the widest interval by masked argmax. A
+    popped leaf (level == nbits) is the next-heaviest symbol — descendant
+    intervals only shrink — an internal node is replaced by its two
+    children. Exact iff every node heavier than the k-th answer fits in
+    the budget (guaranteed at ``budget ≥ 2^(nbits+1)``); the default
+    ``topk_slot_budget`` heuristic is exact on skewed (Zipf-like)
+    distributions and best-effort on near-uniform ones.
+    """
+    lo, hi = _clip_range(wm, lo, hi)
+    syms, counts, _ = _topk_frontier([wm], [lo], [hi], k, budget)
+    return syms, counts
+
+
+def _topk_frontier(wms, los, his, k: int, budget: int | None = None):
+    """Shared greedy top-k engine over a *list* of per-shard states.
+
+    ``wms``: list of WaveletMatrix (identical nbits); slot intervals carry
+    one (lo, hi) pair per shard and a node's weight is the summed width —
+    this makes the sharded greedy top-k a single global frontier rather
+    than a merge of per-shard approximations. Returns
+    (syms (k,), counts (k,), n_found scalar).
+    """
+    nbits = wms[0].nbits
+    S = len(wms)
+    iters, cap = topk_slot_budget(nbits, k)
+    if budget is not None:
+        iters, cap = budget, 2 * budget + 1
+
+    slot_lo = jnp.zeros((cap, S), _I32)
+    slot_hi = jnp.zeros((cap, S), _I32)
+    slot_lo = slot_lo.at[0].set(jnp.stack([jnp.asarray(l, _I32).reshape(())
+                                           for l in los]))
+    slot_hi = slot_hi.at[0].set(jnp.stack([jnp.asarray(h, _I32).reshape(())
+                                           for h in his]))
+    slot_sym = jnp.zeros((cap,), _I32)
+    slot_level = jnp.zeros((cap,), _I32)
+    alive = jnp.zeros((cap,), bool).at[0].set(True)
+    nslots = jnp.asarray(1, _I32)
+
+    out_syms = jnp.full((k,), -1, _I32)
+    out_cnts = jnp.zeros((k,), _I32)
+    nout = jnp.asarray(0, _I32)
+
+    # per-level child maps for every shard, precomputed as closures so the
+    # fori_loop body can switch on the popped node's level
+    def children_at(level_static, wm, lo, hi):
+        lo0, hi0 = wm_interval_zeros(wm, level_static, lo, hi)
+        left = (lo0, hi0)
+        right = wm_child_interval(wm, level_static, lo, hi,
+                                  jnp.asarray(1, _I32), lo0, hi0)
+        return left, right
+
+    def body(_, state):
+        (slot_lo, slot_hi, slot_sym, slot_level, alive, nslots,
+         out_syms, out_cnts, nout) = state
+        weight = jnp.where(alive, jnp.sum(slot_hi - slot_lo, axis=1), -1)
+        best = jnp.argmax(weight)
+        w = weight[best]
+        stop = (w <= 0) | (nout >= k)
+        is_leaf = slot_level[best] == nbits
+
+        # ---- leaf: emit the symbol, retire the slot --------------------
+        emit = (~stop) & is_leaf
+        oidx = jnp.minimum(nout, k - 1)
+        out_syms = out_syms.at[oidx].set(
+            jnp.where(emit, slot_sym[best], out_syms[oidx]))
+        out_cnts = out_cnts.at[oidx].set(
+            jnp.where(emit, w, out_cnts[oidx]))
+        nout = nout + emit.astype(_I32)
+
+        # ---- internal: expand into two children ------------------------
+        expand = (~stop) & (~is_leaf)
+        # lax.switch on the popped node's level: only that level's rank
+        # probes execute, keeping each pop at O(1) directory lookups
+        def level_branch(l):
+            def br(blo, bhi):
+                cs = [children_at(l, wms[s], blo[s], bhi[s])
+                      for s in range(S)]
+                return (jnp.stack([c[0][0] for c in cs]),
+                        jnp.stack([c[0][1] for c in cs]),
+                        jnp.stack([c[1][0] for c in cs]),
+                        jnp.stack([c[1][1] for c in cs]))
+            return br
+
+        lvl = jnp.clip(slot_level[best], 0, nbits - 1)
+        lft_lo, lft_hi, rgt_lo, rgt_hi = jax.lax.switch(
+            lvl, [level_branch(l) for l in range(nbits)],
+            slot_lo[best], slot_hi[best])
+
+        a = jnp.minimum(nslots, cap - 2)
+        b = a + 1
+        child_sym = slot_sym[best] << 1
+        child_lvl = slot_level[best] + 1
+
+        def put(arr, idx, val, on):
+            return arr.at[idx].set(jnp.where(on, val, arr[idx]))
+
+        slot_lo = put(slot_lo, a, lft_lo, expand)
+        slot_hi = put(slot_hi, a, lft_hi, expand)
+        slot_sym = put(slot_sym, a, child_sym, expand)
+        slot_level = put(slot_level, a, child_lvl, expand)
+        slot_lo = put(slot_lo, b, rgt_lo, expand)
+        slot_hi = put(slot_hi, b, rgt_hi, expand)
+        slot_sym = put(slot_sym, b, child_sym | 1, expand)
+        slot_level = put(slot_level, b, child_lvl, expand)
+        alive = put(alive, a, jnp.asarray(True), expand)
+        alive = put(alive, b, jnp.asarray(True), expand)
+        nslots = nslots + 2 * expand.astype(_I32)
+
+        # the popped slot retires either way (unless we already stopped)
+        alive = alive.at[best].set(jnp.where(stop, alive[best], False))
+        return (slot_lo, slot_hi, slot_sym, slot_level, alive, nslots,
+                out_syms, out_cnts, nout)
+
+    state = (slot_lo, slot_hi, slot_sym, slot_level, alive, nslots,
+             out_syms, out_cnts, nout)
+    state = jax.lax.fori_loop(0, iters, body, state)
+    return state[6], state[7], state[8]
+
+
+# --------------------------------------------------------------------------
+# histogram / distinct (breadth-first full descent)
+# --------------------------------------------------------------------------
+
+def range_histogram(wm: WaveletMatrix, lo: jax.Array,
+                    hi: jax.Array) -> jax.Array:
+    """Occurrence count of *every* symbol in [lo, hi): (2^nbits,) int32.
+
+    Breadth-first descent: the interval splits in two at every level, so
+    after ``nbits`` levels slot ``c`` holds symbol c's sub-interval and its
+    width is c's count. O(σ) vector work per query (vs O(logσ) for the
+    point queries above) — this is the dense fallback that ``distinct``
+    needs, and it vectorizes/vmaps cleanly. ``lo``/``hi`` are scalar.
+    """
+    lo, hi = _clip_range(wm, lo, hi)
+    los = jnp.reshape(jnp.asarray(lo, _I32), (1,))
+    his = jnp.reshape(jnp.asarray(hi, _I32), (1,))
+    for l in range(wm.nbits):
+        lo0, hi0 = wm_interval_zeros(wm, l, los, his)
+        rl, rh = wm_child_interval(wm, l, los, his, jnp.asarray(1, _I32),
+                                   lo0, hi0)
+        # child order: appending the level's bit as the next prefix bit
+        # keeps slot index == symbol after the last level
+        los = jnp.stack([lo0, rl], axis=-1).reshape(-1)
+        his = jnp.stack([hi0, rh], axis=-1).reshape(-1)
+    return his - los
+
+
+def range_distinct(wm: WaveletMatrix, lo: jax.Array,
+                   hi: jax.Array) -> jax.Array:
+    """# of distinct symbols in [lo, hi). Scalar lo/hi; vmap for batches."""
+    return jnp.sum(range_histogram(wm, lo, hi) > 0).astype(_I32)

@@ -134,6 +134,42 @@ def build_wavelet_matrix_levelwise(seq: jax.Array, sigma: int,
 
 
 # --------------------------------------------------------------------------
+# Level-descent primitives (shared by queries here and repro.analytics)
+# --------------------------------------------------------------------------
+
+def wm_interval_zeros(wm: WaveletMatrix, l: int, lo: jax.Array,
+                      hi: jax.Array):
+    """rank0 at both ends of [lo, hi) on level ``l``: (zeros before lo,
+    zeros before hi). The zero count *inside* the interval is the
+    difference — the quantity every range query branches on."""
+    bv = wm.level(l)
+    return rank0(bv.rank, lo), rank0(bv.rank, hi)
+
+
+def wm_child_interval(wm: WaveletMatrix, l: int, lo: jax.Array,
+                      hi: jax.Array, bit: jax.Array,
+                      lo0: jax.Array = None, hi0: jax.Array = None):
+    """Map interval [lo, hi) at level ``l`` to its child interval under
+    ``bit`` (0 → left/zero block, 1 → right/one block). Pass ``lo0``/``hi0``
+    (rank0 at the endpoints) when already computed to avoid re-ranking."""
+    if lo0 is None or hi0 is None:
+        lo0, hi0 = wm_interval_zeros(wm, l, lo, hi)
+    lo1 = wm.zeros[l] + (lo - lo0)
+    hi1 = wm.zeros[l] + (hi - hi0)
+    return (jnp.where(bit == 0, lo0, lo1),
+            jnp.where(bit == 0, hi0, hi1))
+
+
+def wm_position_step(wm: WaveletMatrix, l: int, p: jax.Array):
+    """Follow one position down a level: (bit at p, position in child)."""
+    bv = wm.level(l)
+    bit = access_bit(bv.rank, p)
+    child = jnp.where(bit == 0, rank0(bv.rank, p),
+                      wm.zeros[l] + rank1(bv.rank, p))
+    return bit, child
+
+
+# --------------------------------------------------------------------------
 # Queries
 # --------------------------------------------------------------------------
 
@@ -143,11 +179,8 @@ def wm_access(wm: WaveletMatrix, i: jax.Array) -> jax.Array:
     c = jnp.zeros_like(i)
     p = i
     for l in range(wm.nbits):
-        bv = wm.level(l)
-        bit = access_bit(bv.rank, p)
+        bit, p = wm_position_step(wm, l, p)
         c = (c << 1) | bit
-        p = jnp.where(bit == 0, rank0(bv.rank, p),
-                      wm.zeros[l] + rank1(bv.rank, p))
     return c
 
 
@@ -158,13 +191,8 @@ def wm_rank(wm: WaveletMatrix, c: jax.Array, i: jax.Array) -> jax.Array:
     lo = jnp.zeros_like(i)
     hi = i
     for l in range(wm.nbits):
-        bv = wm.level(l)
         bit = (c >> (wm.nbits - 1 - l)) & 1
-        lo0, hi0 = rank0(bv.rank, lo), rank0(bv.rank, hi)
-        lo1 = wm.zeros[l] + (lo - lo0)
-        hi1 = wm.zeros[l] + (hi - hi0)
-        lo = jnp.where(bit == 0, lo0, lo1)
-        hi = jnp.where(bit == 0, hi0, hi1)
+        lo, hi = wm_child_interval(wm, l, lo, hi, bit)
     return hi - lo
 
 
@@ -181,10 +209,8 @@ def wm_select(wm: WaveletMatrix, c: jax.Array, k: jax.Array) -> jax.Array:
     k = jnp.asarray(k, jnp.int32)
     lo = jnp.zeros_like(k)
     for l in range(wm.nbits):
-        bv = wm.level(l)
         bit = (c >> (wm.nbits - 1 - l)) & 1
-        lo0 = rank0(bv.rank, lo)
-        lo = jnp.where(bit == 0, lo0, wm.zeros[l] + (lo - lo0))
+        lo, _ = wm_child_interval(wm, l, lo, lo, bit)
     pos = lo + k
     for l in range(wm.nbits - 1, -1, -1):
         bv = wm.level(l)

@@ -3,7 +3,9 @@ deterministic batch pipeline."""
 from .compressed_store import (CompressedCorpus, build_compressed_corpus,
                                token_histogram)
 from .pipeline import TokenBatcher, batch_offsets
+from .shard_build import build_shards_stacked
 from .synthetic import make_corpus, zipf_probs
 
 __all__ = ["CompressedCorpus", "build_compressed_corpus", "token_histogram",
-           "TokenBatcher", "batch_offsets", "make_corpus", "zipf_probs"]
+           "TokenBatcher", "batch_offsets", "build_shards_stacked",
+           "make_corpus", "zipf_probs"]

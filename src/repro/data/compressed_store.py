@@ -15,7 +15,6 @@ power of two so position → (shard, offset) is shift/mask.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -23,9 +22,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analytics.engine import (sharded_range_count,
+                                    sharded_range_distinct,
+                                    sharded_range_histogram,
+                                    sharded_range_quantile,
+                                    sharded_range_topk)
 from repro.core.wavelet_matrix import (WaveletMatrix, build_wavelet_matrix,
                                        num_levels, wm_access, wm_rank,
                                        wm_select)
+
+from .shard_build import build_shards_stacked
 
 _I32 = jnp.int32
 
@@ -113,16 +119,48 @@ class CompressedCorpus:
         flat = jax.vmap(one)(token.reshape(-1), k.reshape(-1))
         return flat.reshape(token.shape)
 
+    # ---- range analytics (repro.analytics engine over these shards) ----
+    def range_quantile(self, lo, hi, k) -> jax.Array:
+        """k-th smallest token in corpus positions [lo, hi). Batched."""
+        return sharded_range_quantile(self.shards, self.shard_bits, self.n,
+                                      lo, hi, k)
+
+    def range_count(self, lo, hi, sym_lo, sym_hi) -> jax.Array:
+        """# of positions in [lo, hi) holding a token in [sym_lo, sym_hi)."""
+        return sharded_range_count(self.shards, self.shard_bits, self.n,
+                                   lo, hi, sym_lo, sym_hi)
+
+    def range_topk(self, lo, hi, k: int):
+        """(tokens, counts) of the k most frequent tokens in [lo, hi)."""
+        return sharded_range_topk(self.shards, self.shard_bits, self.n,
+                                  lo, hi, k)
+
+    def range_distinct(self, lo, hi) -> jax.Array:
+        """# of distinct tokens in [lo, hi)."""
+        return sharded_range_distinct(self.shards, self.shard_bits, self.n,
+                                      lo, hi)
+
+    def range_histogram(self, lo, hi) -> jax.Array:
+        """Per-token counts over [lo, hi): (…, 2^nbits) int32."""
+        return sharded_range_histogram(self.shards, self.shard_bits, self.n,
+                                       lo, hi)
+
 
 def build_compressed_corpus(tokens: np.ndarray, sigma: int,
                             shard_bits: int = 16, tau: int = 8,
                             big_step: str = "compose",
-                            sample_rate: int = 512) -> CompressedCorpus:
+                            sample_rate: int = 512,
+                            parallel: str | bool = "auto"
+                            ) -> CompressedCorpus:
     """Ingest a token stream: pad to whole shards, run the paper's parallel
-    construction per shard, stack the shard trees leaf-wise.
+    construction per shard, stack the shard trees leaf-wise. Shard builds
+    fan out over the device mesh (``data.shard_build``): pmap across
+    devices when several are present, else a vmap or the sequential loop
+    per ``parallel`` ("auto" | True | False).
 
-    Padding tokens are ``sigma - 1``-valued only in the slack tail of the
-    last shard and are never addressed (n records the true length).
+    Padding tokens (id 0) exist only in the slack tail of the last shard
+    and are never addressed (n records the true length; the shard
+    histograms subtract them).
     """
     n = int(len(tokens))
     shard_size = 1 << shard_bits
@@ -133,10 +171,10 @@ def build_compressed_corpus(tokens: np.ndarray, sigma: int,
         toks = np.concatenate([toks, np.zeros(pad, np.uint32)])
     shards_np = toks.reshape(num_shards, shard_size)
 
-    built = [build_wavelet_matrix(jnp.asarray(s), sigma, tau=tau,
-                                  big_step=big_step, sample_rate=sample_rate)
-             for s in shards_np]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    stacked = build_shards_stacked(
+        lambda s: build_wavelet_matrix(s, sigma, tau=tau, big_step=big_step,
+                                       sample_rate=sample_rate),
+        shards_np, parallel=parallel)
 
     hist = np.zeros((num_shards, sigma), np.int64)
     for i, s in enumerate(shards_np):

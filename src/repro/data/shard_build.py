@@ -1,0 +1,63 @@
+"""Parallel per-shard structure builds (compressed store + text index).
+
+Shard builds are embarrassingly parallel: every shard runs the same
+static-shape construction pipeline on its own slice. This helper turns the
+historical host-side Python loop into a traced build:
+
+* multi-device (``jax.local_device_count() > 1``): ``pmap`` over a device
+  axis with an inner ``vmap`` over the shards each device owns — the mesh
+  builds all shards at once and the result is already stacked leaf-wise;
+* single device with ``parallel=True``: one ``vmap`` — a single XLA
+  program builds every shard (no per-shard dispatch overhead);
+* ``parallel=False`` or single device on "auto": the sequential loop —
+  per-shard host dispatch, but each shard's build can early-exit on
+  concrete values (e.g. the suffix-array doubling loop), which wins on one
+  CPU device.
+
+Any traced path requires ``build_one`` to be trace-safe (no host syncs on
+data values) — the wavelet-matrix and FM-index builders both are when
+their alphabet size is pinned.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def build_shards_stacked(build_one: Callable, shards: jax.Array, *,
+                         parallel: str | bool = "auto"):
+    """Build one pytree per shard row and stack them leaf-wise.
+
+    ``shards``: (num_shards, shard_size) array (any integer dtype).
+    ``parallel``: "auto" | True | False as described in the module doc.
+    pmap requires ``num_shards`` divisible by the device count; otherwise
+    the traced path falls back to a single vmap.
+    """
+    shards = jnp.asarray(shards)
+    num_shards = shards.shape[0]
+    ndev = jax.local_device_count()
+
+    if parallel == "auto":
+        mode = "pmap" if (ndev > 1 and num_shards > 1) else "loop"
+    elif parallel is True:
+        mode = "pmap" if (ndev > 1 and num_shards > 1) else "vmap"
+    elif parallel is False:
+        mode = "loop"
+    else:
+        raise ValueError(f"parallel must be 'auto'/True/False, "
+                         f"got {parallel!r}")
+    if mode == "pmap" and num_shards % ndev != 0:
+        mode = "vmap"                  # ragged over devices → one program
+
+    if mode == "loop" or num_shards == 1:
+        built = [build_one(shards[s]) for s in range(num_shards)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    if mode == "vmap":
+        return jax.vmap(build_one)(shards)
+    per = num_shards // ndev
+    out = jax.pmap(jax.vmap(build_one))(
+        shards.reshape(ndev, per, shards.shape[1]))
+    return jax.tree.map(
+        lambda l: l.reshape((num_shards,) + l.shape[2:]), out)

@@ -32,7 +32,6 @@ from dataclasses import dataclass, field
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.rank_select import (BinaryRank, access_bit,
                                     build_binary_rank, rank1)
@@ -82,9 +81,16 @@ def build_fm_index(seq, sigma: int, *, sample_rate: int = 32,
                    bv_sample_rate: int = 512,
                    backend: str = "counting") -> FMIndex:
     """Build the index: parallel SA (prefix doubling) → BWT gather → paper
-    wavelet-matrix construction (Theorem 4.5) → sampled-SA directories."""
+    wavelet-matrix construction (Theorem 4.5) → sampled-SA directories.
+
+    Fully trace-safe (no host syncs on data values), so whole-shard builds
+    can run under ``vmap``/``pmap`` — see ``data.shard_build``. The
+    out-of-alphabet validation only fires on concrete inputs.
+    """
     seq = jnp.asarray(seq)
-    if seq.size and (int(jnp.min(seq)) < 0 or int(jnp.max(seq)) >= sigma):
+    concrete = not isinstance(seq, jax.core.Tracer)
+    if concrete and seq.size and (int(jnp.min(seq)) < 0
+                                  or int(jnp.max(seq)) >= sigma):
         # a symbol ≥ σ would be silently dropped from C and truncated by
         # the wavelet matrix — corrupt counts with no error downstream
         raise ValueError(f"symbols outside [0, {sigma})")
@@ -94,12 +100,15 @@ def build_fm_index(seq, sigma: int, *, sample_rate: int = 32,
     wm = build_wavelet_matrix(bwt, sigma_work, tau=tau, big_step=big_step,
                               sample_rate=bv_sample_rate)
 
-    sa_np = np.asarray(sa)
-    marked = (sa_np % sample_rate == 0)
-    # sa is a permutation of [0, m): exactly ceil(m/sample_rate) multiples
-    sample_vals = jnp.asarray(sa_np[marked], _I32)
-    words = bitops.pack_bits(bitops.pad_bits(
-        jnp.asarray(marked.astype(np.uint8))))
+    marked = (sa % sample_rate) == 0
+    # sa is a permutation of [0, m): exactly ceil(m/sample_rate) multiples,
+    # compacted in row order by a scatter on the marked-prefix count
+    num_samples = (m + sample_rate - 1) // sample_rate
+    cnt = jnp.cumsum(marked.astype(_I32)) - 1
+    sample_vals = jnp.zeros((num_samples,), _I32).at[
+        jnp.where(marked, cnt, num_samples)].set(
+            sa.astype(_I32), mode="drop")
+    words = bitops.pack_bits(bitops.pad_bits(marked.astype(jnp.uint8)))
     mark = build_binary_rank(words, m)
     return FMIndex(wm=wm, C=C, mark=mark, sa_sample=sample_vals,
                    n=int(seq.shape[0]), sigma=sigma,

@@ -9,10 +9,16 @@ one jitted kernel for the whole corpus.
 
 The last shard is padded with the out-of-alphabet symbol σ (indexed with an
 alphabet of σ+1), which cannot appear in a query, so padding never produces
-phantom matches. Known limitation (by construction, same as any sharded
-inverted index): a match *spanning a shard boundary* is not found; choose
-``shard_bits`` ≥ document size or align shards to document boundaries
-(``make_corpus`` emits an EOS every ``doc_len`` tokens) when that matters.
+phantom matches.
+
+Cross-shard stitching: per-shard FM-indexes alone cannot see a match that
+*spans a shard boundary*. ``count`` therefore adds a seam pass: every
+internal boundary stores a ±``seam_overlap``-token window of the raw
+stream, and a vectorized sliding compare counts the matches that genuinely
+cross the boundary (within-shard matches are excluded by the crossing
+condition, so nothing is double-counted). Counts are exact for pattern
+lengths ≤ min(seam_overlap + 1, shard_size). ``locate`` still reports
+within-shard positions only — seam hits are count-only for now (ROADMAP).
 """
 from __future__ import annotations
 
@@ -22,19 +28,29 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.shard_build import build_shards_stacked
+
 from .fm_index import FMIndex, build_fm_index, fm_count, fm_locate
 
 _I32 = jnp.int32
+
+#: filler for seam-window slots outside the corpus. Distinct from the -1
+#: that pattern sanitization emits, so masked query symbols can never
+#: "match" masked window slots.
+_SEAM_PAD = -2
 
 
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class ShardedTextIndex:
-    """Stacked per-shard FM-indexes + corpus geometry."""
+    """Stacked per-shard FM-indexes + seam windows + corpus geometry."""
     shards: FMIndex                # every leaf has a leading (S,) axis
+    seam_windows: jax.Array        # (S-1, 2·seam_overlap) int32, _SEAM_PAD
+    #                                filled outside [0, n)
     n: int = field(metadata=dict(static=True))       # true corpus length
     sigma: int = field(metadata=dict(static=True))   # raw vocab size
     shard_bits: int = field(metadata=dict(static=True))
+    seam_overlap: int = field(metadata=dict(static=True))
 
     @property
     def shard_size(self) -> int:
@@ -75,8 +91,43 @@ class ShardedTextIndex:
         return patterns, jnp.where(empty, 1, lengths)
 
     def count(self, patterns: jax.Array, lengths: jax.Array) -> jax.Array:
-        """Total matches per pattern across all shards. (B,) int32."""
-        return jnp.sum(self.count_by_shard(patterns, lengths), axis=0)
+        """Total matches per pattern, (B,) int32 — within-shard matches
+        from the FM-indexes plus boundary-crossing matches from the seam
+        windows. Exact for lengths ≤ min(seam_overlap + 1, shard_size)."""
+        patterns = jnp.atleast_2d(jnp.asarray(patterns, _I32))
+        within = jnp.sum(self.count_by_shard(patterns, lengths), axis=0)
+        return within + self._seam_count(*self._sanitize(patterns, lengths))
+
+    def _seam_count(self, patterns: jax.Array,
+                    lengths: jax.Array) -> jax.Array:
+        """(B,) matches that cross a shard boundary (sanitized inputs).
+
+        A length-l match at window offset o of a seam (boundary at window
+        center ov) crosses iff o < ov < o + l; the sliding compare is one
+        broadcast equality over (B patterns × seams × offsets × positions).
+        Patterns longer than the exactness domain min(ov+1, shard_size)
+        contribute 0 here (their count stays within-shard-only) rather
+        than a partial crossing count: beyond ov+1 the window cannot hold
+        every crossing start, and beyond shard_size a match could cross
+        two seams and double-count.
+        """
+        ns, width = self.seam_windows.shape
+        ov = self.seam_overlap
+        B, L = patterns.shape
+        if ns == 0 or ov == 0:
+            return jnp.zeros((B,), _I32)
+        lmax = min(ov + 1, self.shard_size)
+        o = jnp.arange(width, dtype=_I32)                       # offsets
+        t = jnp.arange(L, dtype=_I32)                           # positions
+        idx = jnp.minimum(o[:, None] + t[None, :], width - 1)   # (O, L)
+        win = self.seam_windows[:, idx]                         # (ns, O, L)
+        pat = patterns[:, None, None, :]                        # (B,1,1,L)
+        past_len = (t[None, :] >= lengths[:, None])[:, None, None, :]
+        hit = jnp.all((win[None] == pat) | past_len, axis=-1)   # (B, ns, O)
+        ol = o[None, :] + lengths[:, None]                      # (B, O)
+        span = ((o[None, :] < ov) & (ol > ov) & (ol <= width)
+                & (lengths[:, None] <= lmax))[:, None, :]
+        return jnp.sum(hit & span, axis=(1, 2)).astype(_I32)
 
     def count_by_shard(self, patterns: jax.Array,
                        lengths: jax.Array) -> jax.Array:
@@ -117,17 +168,41 @@ class ShardedTextIndex:
                          jnp.asarray(-1, _I32), out)
 
 
+def seam_windows_from_tokens(tokens: np.ndarray, num_shards: int,
+                             shard_size: int, seam_overlap: int) -> np.ndarray:
+    """(num_shards-1, 2·seam_overlap) raw-stream windows around each
+    internal shard boundary, ``_SEAM_PAD``-filled outside [0, n)."""
+    n = len(tokens)
+    ns = max(0, num_shards - 1)
+    width = 2 * seam_overlap
+    win = np.full((ns, width), _SEAM_PAD, np.int32)
+    for s in range(ns):
+        p = (s + 1) * shard_size
+        g0 = p - seam_overlap
+        for o in range(width):
+            g = g0 + o
+            if 0 <= g < n:
+                win[s, o] = tokens[g]
+    return win
+
+
 def build_sharded_index(tokens: np.ndarray, sigma: int, *,
                         shard_bits: int = 14, sample_rate: int = 32,
                         tau: int = 8, big_step: str = "compose",
                         bv_sample_rate: int = 512,
-                        backend: str = "counting") -> ShardedTextIndex:
+                        backend: str = "counting",
+                        seam_overlap: int = 15,
+                        parallel: str | bool = "auto") -> ShardedTextIndex:
     """Shard the token stream and run the full per-shard build pipeline
-    (suffix array → BWT → wavelet matrix → SA samples) shard by shard,
-    then stack the resulting pytrees leaf-wise.
+    (suffix array → BWT → wavelet matrix → SA samples) on every shard,
+    stacking the resulting pytrees leaf-wise.
 
-    Each shard build is independent — on a multi-chip mesh they pmap; here
-    they loop. The tail shard is padded with the out-of-alphabet symbol σ.
+    Shard builds fan out over the device mesh via ``data.shard_build``
+    (pmap across devices, vmap on one device when ``parallel=True``, else
+    the sequential loop with its per-shard early exits). The tail shard is
+    padded with the out-of-alphabet symbol σ. ``seam_overlap`` sets the
+    half-width of the boundary windows that make ``count`` exact across
+    shard seams for pattern lengths ≤ seam_overlap + 1 (0 disables).
     """
     n = int(len(tokens))
     shard_size = 1 << shard_bits
@@ -140,11 +215,15 @@ def build_sharded_index(tokens: np.ndarray, sigma: int, *,
         toks = np.concatenate([toks, np.full(pad, sigma, np.int64)])
     shards_np = toks.reshape(num_shards, shard_size)
 
-    built = [build_fm_index(jnp.asarray(s, _I32), sigma + 1,
-                            sample_rate=sample_rate, tau=tau,
-                            big_step=big_step,
-                            bv_sample_rate=bv_sample_rate, backend=backend)
-             for s in shards_np]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
-    return ShardedTextIndex(shards=stacked, n=n, sigma=sigma,
-                            shard_bits=shard_bits)
+    stacked = build_shards_stacked(
+        lambda s: build_fm_index(s.astype(_I32), sigma + 1,
+                                 sample_rate=sample_rate, tau=tau,
+                                 big_step=big_step,
+                                 bv_sample_rate=bv_sample_rate,
+                                 backend=backend),
+        shards_np, parallel=parallel)
+    seams = seam_windows_from_tokens(np.asarray(tokens, np.int64),
+                                     num_shards, shard_size, seam_overlap)
+    return ShardedTextIndex(shards=stacked, seam_windows=jnp.asarray(seams),
+                            n=n, sigma=sigma, shard_bits=shard_bits,
+                            seam_overlap=seam_overlap)

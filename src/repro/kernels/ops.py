@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from . import bitpack as _bitpack
 from . import rank_build as _rank_build
 from . import wm_level as _wm_level
+from . import wm_quantile as _wm_quantile
 
 
 def _default_interpret() -> bool:
@@ -81,3 +82,51 @@ def wm_level_step(sub: jax.Array, shift: int, n: int,
                                              interpret=interpret)
     wreal = (n + 31) // 32
     return dest[0, :n], bitmap[0, :wreal], total[0, 0]
+
+
+def _pad_axis1(x: jax.Array, mult: int) -> jax.Array:
+    pad = (-x.shape[1]) % mult
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros((x.shape[0], pad), x.dtype)], axis=1)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def wm_quantile_batch(wm, lo: jax.Array, hi: jax.Array, k: jax.Array,
+                      interpret: bool | None = None) -> jax.Array:
+    """Batched range-quantile over one ``WaveletMatrix`` via the fused
+    Pallas level-descent kernel (all nbits levels in one launch).
+
+    ``lo``/``hi``/``k``: (Q,) int32. Returns (Q,) int32 symbols, -1 for
+    empty ranges (same contract as ``repro.analytics.range_quantile``).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    lo = jnp.atleast_1d(jnp.asarray(lo, jnp.int32))
+    hi = jnp.atleast_1d(jnp.asarray(hi, jnp.int32))
+    k = jnp.atleast_1d(jnp.asarray(k, jnp.int32))
+    q = lo.shape[0]
+    qpad = ((q + _wm_quantile.QBLOCK - 1)
+            // _wm_quantile.QBLOCK) * _wm_quantile.QBLOCK
+    queries = jnp.zeros((3, qpad), jnp.int32)
+    queries = queries.at[0, :q].set(lo).at[1, :q].set(hi).at[2, :q].set(k)
+
+    rank = wm.bitvectors.rank                 # leaves carry (nbits,) axis
+    nblocks = rank.block.shape[1]
+    # pad the word rows so every directory block can gather all 4 words
+    words = _pad_axis1(rank.words, 128)
+    if words.shape[1] < nblocks * _wm_quantile.BLOCK_WORDS:
+        words = _pad_axis1(
+            jnp.concatenate(
+                [words, jnp.zeros((words.shape[0],
+                                   nblocks * _wm_quantile.BLOCK_WORDS
+                                   - words.shape[1]), words.dtype)],
+                axis=1), 128)
+    superblock = _pad_axis1(rank.superblock, 128)
+    block = _pad_axis1(rank.block.astype(jnp.int32), 128)
+    zeros = wm.zeros.reshape(1, -1)
+    out = _wm_quantile.wm_quantile_pallas(
+        queries, words, superblock, block, zeros,
+        n=wm.n, nblocks=nblocks, interpret=interpret)
+    return out[0, :q]

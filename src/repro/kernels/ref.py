@@ -30,6 +30,38 @@ def rank_build_ref(words: jax.Array, n: int):
     return superblock, block
 
 
+def wm_quantile_ref(level_words: jax.Array, zeros: jax.Array, n: int,
+                    lo: jax.Array, hi: jax.Array, k: jax.Array) -> jax.Array:
+    """Range-quantile oracle from raw level bitmaps (exact integers).
+
+    ``level_words``: (nbits, W) packed level bitmaps; ``zeros``: (nbits,)
+    zero counts. rank0 is a dense prefix sum over the unpacked bits — no
+    directories involved, so this cross-checks the kernel's directory walk.
+    Vectorized over query arrays; empty ranges return -1, k clamps.
+    """
+    nbits = level_words.shape[0]
+    # cum0[l, i] = # of zero bits among the first i bits of level l
+    bits = jnp.stack([bitops.unpack_bits(level_words[l], n)
+                      for l in range(nbits)]).astype(jnp.int32)
+    cum0 = jnp.concatenate(
+        [jnp.zeros((nbits, 1), jnp.int32),
+         jnp.cumsum(1 - bits, axis=1, dtype=jnp.int32)], axis=1)
+    lo = jnp.clip(jnp.asarray(lo, jnp.int32), 0, n)
+    hi = jnp.clip(jnp.asarray(hi, jnp.int32), lo, n)
+    k = jnp.clip(jnp.asarray(k, jnp.int32), 0, jnp.maximum(hi - lo - 1, 0))
+    empty = hi <= lo
+    sym = jnp.zeros_like(lo)
+    for l in range(nbits):
+        lo0, hi0 = cum0[l][lo], cum0[l][hi]
+        z = hi0 - lo0
+        bit = (k >= z).astype(jnp.int32)
+        sym = (sym << 1) | bit
+        k = jnp.where(bit == 1, k - z, k)
+        lo = jnp.where(bit == 1, zeros[l] + (lo - lo0), lo0)
+        hi = jnp.where(bit == 1, zeros[l] + (hi - hi0), hi0)
+    return jnp.where(empty, jnp.asarray(-1, jnp.int32), sym)
+
+
 def wm_level_step_ref(sub: jax.Array, shift: int, n: int):
     """(dest, bitmap, total_zeros) for one wavelet-matrix level."""
     sub = sub[:n].astype(jnp.uint32)

@@ -274,34 +274,24 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
                            specs["cache"], specs["pos"])
     t_lower = time.time() - t0
 
-    t0 = time.time()
-    compiled = lowered.compile()
-    t_compile = time.time() - t0
+    analyzed = _analyze_compiled(lowered, save_hlo)
     mesh_ctx.__exit__(None, None, None)
     shard_ctx.clear_mesh_context()
 
-    mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
-    hlo = compiled.as_text()
-    coll = collective_bytes_per_device(hlo)
-    if save_hlo:
-        save_hlo.write_text(hlo)
-
+    mem = analyzed["memory"]
     result = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "devices": mesh.devices.size,
         "ok": True,
-        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
-        "flops_per_device": cost.get("flops", 0.0),
-        "bytes_accessed_per_device": cost.get("bytes accessed", 0.0),
-        "collective_bytes_per_device": coll,
+        "lower_s": round(t_lower, 1), "compile_s": analyzed["compile_s"],
+        "flops_per_device": analyzed["flops"],
+        "bytes_accessed_per_device": analyzed["bytes_accessed"],
+        "collective_bytes_per_device": analyzed["collective_bytes"],
         "memory": {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0)
-                           + getattr(mem, "temp_size_in_bytes", 0)),
+            **mem,
+            "peak_bytes": ((mem["argument_bytes"] or 0)
+                           + (mem["temp_bytes"] or 0)),
         },
     }
     return result
@@ -310,6 +300,82 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 def abstract_opt_state_specs(pspecs):
     from repro.optim.adamw import AdamWState
     return AdamWState(m=pspecs, v=pspecs, step=P())
+
+
+# --------------------------------------------------------------------------
+# Range-analytics cell: lower + compile the batched serving path and the
+# fused Pallas quantile kernel so HLO/cost analysis covers the new
+# subsystem alongside the model cells.
+# --------------------------------------------------------------------------
+
+def _analyze_compiled(lowered, save_hlo: Path | None = None) -> dict:
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):    # older jax returns [dict]
+        cost = cost[0] if cost else {}
+    hlo = compiled.as_text()
+    if save_hlo:
+        save_hlo.write_text(hlo)
+    return {
+        "ok": True, "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": collective_bytes_per_device(hlo),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        },
+    }
+
+
+def run_analytics_cell(out_dir: Path, save_hlo: bool = False) -> dict:
+    """Build a small analytics store and compile its serving programs:
+    the four-op batched query path and the fused Pallas quantile kernel."""
+    import numpy as np
+    from repro.analytics import build_sharded_analytics
+    from repro.data import make_corpus
+    from repro.kernels.ops import wm_quantile_batch
+
+    n, vocab, sb, B = 1 << 14, 1024, 12, 1024
+    toks = np.asarray(make_corpus(n, vocab, seed=0), np.int64)
+    eng = build_sharded_analytics(toks, vocab, shard_bits=sb)
+    rng = np.random.default_rng(1)
+    lo = jnp.asarray(rng.integers(0, n, B).astype(np.int32))
+    hi = jnp.minimum(lo + jnp.asarray(
+        rng.integers(1, n // 2, B).astype(np.int32)), n)
+    k = jnp.asarray(rng.integers(0, n // 2, B).astype(np.int32))
+    s0 = jnp.asarray(rng.integers(0, vocab, B).astype(np.int32))
+    s1 = jnp.minimum(s0 + 32, vocab)
+
+    serve = jax.jit(lambda e, a, b, c, x, y: (
+        e.range_quantile(a, b, c), e.range_count(a, b, x, y),
+        e.range_topk(a, b, 8), e.range_distinct(a, b)))
+    t0 = time.time()
+    lowered = serve.lower(eng, lo, hi, k, s0, s1)
+    cell_serve = _analyze_compiled(
+        lowered, out_dir / "analytics__serve.hlo.txt" if save_hlo else None)
+    cell_serve["lower_s"] = round(time.time() - t0, 1)
+
+    kern = jax.jit(lambda w, a, b, c: wm_quantile_batch(w, a, b, c))
+    t0 = time.time()
+    lowered = kern.lower(eng.shard(0), lo, hi, k)
+    cell_kernel = _analyze_compiled(
+        lowered,
+        out_dir / "analytics__quantile_kernel.hlo.txt" if save_hlo else None)
+    cell_kernel["lower_s"] = round(time.time() - t0, 1)
+
+    result = {
+        "cell": "analytics", "ok": True,
+        "n": n, "vocab": vocab, "batch": B,
+        "num_shards": eng.num_shards,
+        "serve_4op_batch": cell_serve,
+        "fused_quantile_kernel": cell_kernel,
+    }
+    return result
 
 
 # --------------------------------------------------------------------------
@@ -327,11 +393,33 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--analytics", action="store_true",
+                    help="also compile the range-analytics serving cell")
     ap.add_argument("--out", type=Path, default=RESULTS_DEFAULT)
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--save-hlo", action="store_true")
     args = ap.parse_args()
     args.out.mkdir(parents=True, exist_ok=True)
+
+    if args.analytics or args.all:
+        out_file = args.out / "analytics__serving.json"
+        if out_file.exists() and not args.force:
+            print("=== analytics (cached) ===", flush=True)
+        else:
+            print("=== analytics ===", flush=True)
+            try:
+                res = run_analytics_cell(args.out, save_hlo=args.save_hlo)
+                out_file.write_text(json.dumps(res, indent=1))
+                print(json.dumps({k: res[k] for k in
+                                  ("serve_4op_batch",
+                                   "fused_quantile_kernel")}), flush=True)
+            except Exception as e:  # noqa: BLE001
+                out_file.write_text(json.dumps(
+                    {"cell": "analytics", "ok": False,
+                     "error": repr(e)[:2000]}))
+                print(f"FAILED: {e!r}"[:500], flush=True)
+        if args.analytics and not args.all and not args.arch:
+            return
 
     if args.all:
         archs = list(ARCHITECTURES)

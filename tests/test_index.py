@@ -148,7 +148,9 @@ def test_fm_locate_adversarial_texts():
 # sharded index
 # ---------------------------------------------------------------------------
 
-def test_sharded_count_matches_within_shard_naive():
+def test_sharded_count_matches_global_naive():
+    """Seam stitching makes ``count`` exact against the *global* sliding
+    oracle — matches crossing shard boundaries included."""
     n, sigma, sb = 2500, 64, 9          # 5 shards of 512, last one padded
     toks = np.asarray(make_corpus(n, sigma, seed=2), np.int64)
     idx = build_sharded_index(toks, sigma, shard_bits=sb, sample_rate=16)
@@ -161,15 +163,47 @@ def test_sharded_count_matches_within_shard_naive():
         s = int(rng.integers(0, n - lens[i]))
         pats[i, :lens[i]] = toks[s:s + lens[i]]
     got = np.asarray(idx.count(jnp.asarray(pats), jnp.asarray(lens)))
-    S = idx.shard_size
-    want = np.array([sum(_naive_count(toks[s0:s0 + S], p, int(l))
-                         for s0 in range(0, n, S))
+    want = np.array([_naive_count(toks, p, int(l))
                      for p, l in zip(pats, lens)])
     assert np.array_equal(got, want)
+    # per-shard decomposition still reports within-shard matches only
+    S = idx.shard_size
     by_shard = np.asarray(idx.count_by_shard(jnp.asarray(pats),
                                              jnp.asarray(lens)))
     assert by_shard.shape == (5, B)
-    assert np.array_equal(by_shard.sum(axis=0), want)
+    want_within = np.array([sum(_naive_count(toks[s0:s0 + S], p, int(l))
+                                for s0 in range(0, n, S))
+                            for p, l in zip(pats, lens)])
+    assert np.array_equal(by_shard.sum(axis=0), want_within)
+
+
+def test_sharded_count_stitches_planted_seam_matches():
+    """Patterns planted *across* every shard seam are found by count."""
+    n, sigma, sb = 2048, 32, 9
+    rng = np.random.default_rng(11)
+    toks = rng.integers(0, sigma, n).astype(np.int64)
+    S = 1 << sb
+    planted = np.array([9, 4, 9, 4, 9, 4], np.int64)
+    for p in range(S, n, S):            # straddle every internal boundary
+        toks[p - 3:p + 3] = planted
+    idx = build_sharded_index(toks, sigma, shard_bits=sb, sample_rate=16)
+    pats_np = np.full((2, 6), sigma, np.int64)
+    pats_np[0] = planted
+    pats_np[1, :4] = planted[:4]
+    pats = jnp.asarray(pats_np, jnp.int32)
+    lens = jnp.asarray([6, 4], jnp.int32)
+    got = np.asarray(idx.count(pats, lens))
+    for i, l in enumerate([6, 4]):
+        assert got[i] == _naive_count(toks, np.asarray(pats[i]), l), i
+    # seam contribution alone equals global minus within-shard
+    by_shard = np.asarray(idx.count_by_shard(pats, lens)).sum(axis=0)
+    assert (got - by_shard >= idx.num_shards - 1).all()
+
+    # overlap 0 disables stitching → within-shard counts only
+    idx0 = build_sharded_index(toks, sigma, shard_bits=sb, sample_rate=16,
+                               seam_overlap=0)
+    got0 = np.asarray(idx0.count(pats, lens))
+    assert np.array_equal(got0, by_shard)
 
 
 def test_sharded_locate_positions_are_real_matches():

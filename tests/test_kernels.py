@@ -120,3 +120,45 @@ def test_wm_level_dest_is_stable_partition():
                              np.flatnonzero(bit == 1)])
     assert np.array_equal(out, expect)
     assert int(tz) == int((bit == 0).sum())
+
+
+# ---------------------------------------------------------------------------
+# wm_quantile (fused level descent)
+# ---------------------------------------------------------------------------
+
+def _quantile_case(n, sigma, q, seed):
+    rng = np.random.default_rng(seed)
+    from repro.core import build_wavelet_matrix
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    wm = build_wavelet_matrix(jnp.asarray(seq), sigma, sample_rate=128)
+    lo = rng.integers(0, n + 1, q).astype(np.int32)
+    hi = rng.integers(0, n + 1, q).astype(np.int32)
+    lo, hi = np.minimum(lo, hi), np.maximum(lo, hi)
+    k = rng.integers(0, n, q).astype(np.int32)
+    return seq, wm, lo, hi, k
+
+
+@pytest.mark.parametrize("n,sigma", [(33, 2), (777, 5), (1000, 37),
+                                     (4096, 256), (1500, 1000)])
+def test_wm_quantile_kernel_vs_ref_and_oracle(n, sigma):
+    seq, wm, lo, hi, k = _quantile_case(n, sigma, 300, n + sigma)
+    got = np.asarray(ops.wm_quantile_batch(wm, jnp.asarray(lo),
+                                           jnp.asarray(hi), jnp.asarray(k)))
+    want_ref = np.asarray(ref.wm_quantile_ref(
+        wm.bitvectors.rank.words, wm.zeros, n,
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(k)))
+    assert np.array_equal(got, want_ref)
+    for i in range(len(lo)):
+        sub = np.sort(seq[lo[i]:hi[i]])
+        want = sub[min(k[i], len(sub) - 1)] if len(sub) else -1
+        assert got[i] == want, (i, lo[i], hi[i], k[i])
+
+
+def test_wm_quantile_kernel_agrees_with_analytics_op():
+    from repro.analytics import range_quantile
+    _, wm, lo, hi, k = _quantile_case(2048, 97, 512, 5)
+    got = np.asarray(ops.wm_quantile_batch(wm, jnp.asarray(lo),
+                                           jnp.asarray(hi), jnp.asarray(k)))
+    want = np.asarray(range_quantile(wm, jnp.asarray(lo), jnp.asarray(hi),
+                                     jnp.asarray(k)))
+    assert np.array_equal(got, want)
