@@ -1,0 +1,72 @@
+"""Construction fast path: before/after evidence for the fused builder.
+
+Rows per (n, σ): the levelwise prior-work baseline [Shun'15], the
+historical step-by-step XLA τ-chunk path (``fused=False`` — the "before"),
+and the fused fast path (``fused=True`` — select-gather partitions,
+batched directory build). ``speedup_vs_xla`` on the fused rows is the
+headline number; the acceptance bar is ≥ 2× at n ≥ 2^20, σ = 256.
+
+A second section times the stable counting rank that drives the big-node
+sort and every suffix-array doubling round (one-hot-free blocked path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sort import counting_rank
+from repro.core.wavelet_matrix import (build_wavelet_matrix,
+                                       build_wavelet_matrix_levelwise)
+
+from .common import record, save, time_fn
+
+
+def run(n: int = 1 << 20, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    tau = 8
+    for sigma in (256, 65536):
+        seq = jnp.asarray(np.random.default_rng(0)
+                          .integers(0, sigma, n).astype(np.uint32))
+
+        f = jax.jit(functools.partial(build_wavelet_matrix_levelwise,
+                                      sigma=sigma))
+        t_lvl = time_fn(f, seq, iters=3)
+        record(rows, f"construct_levelwise_n{n}_s{sigma}", t_lvl,
+               melem_per_s=round(n / t_lvl / 1e6, 1))
+
+        f = jax.jit(functools.partial(build_wavelet_matrix, sigma=sigma,
+                                      tau=tau, fused=False))
+        t_xla = time_fn(f, seq, iters=3)
+        record(rows, f"construct_xla_tau{tau}_n{n}_s{sigma}", t_xla,
+               melem_per_s=round(n / t_xla / 1e6, 1),
+               speedup_vs_levelwise=round(t_lvl / t_xla, 2))
+
+        f = jax.jit(functools.partial(build_wavelet_matrix, sigma=sigma,
+                                      tau=tau, fused=True,
+                                      use_kernels=False))
+        t_fused = time_fn(f, seq, iters=3)
+        record(rows, f"construct_fused_tau{tau}_n{n}_s{sigma}", t_fused,
+               melem_per_s=round(n / t_fused / 1e6, 1),
+               speedup_vs_xla=round(t_xla / t_fused, 2),
+               speedup_vs_levelwise=round(t_lvl / t_fused, 2))
+
+    # the big-node / suffix-array sort primitive (8-bit digits)
+    nb = 256
+    digits = jnp.asarray(np.random.default_rng(1)
+                         .integers(0, nb, n).astype(np.int32))
+    f = jax.jit(functools.partial(counting_rank, num_buckets=nb,
+                                  use_kernel=False))
+    t_cr = time_fn(f, digits, iters=3)
+    record(rows, f"counting_rank_blocked_n{n}_b{nb}", t_cr,
+           melem_per_s=round(n / t_cr / 1e6, 1))
+
+    if out is None:
+        save(rows, "construction.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,14 +11,15 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (bench_analytics, bench_corpus_store, bench_huffman,
-               bench_index, bench_kernels, bench_multiary,
+from . import (bench_analytics, bench_construction, bench_corpus_store,
+               bench_huffman, bench_index, bench_kernels, bench_multiary,
                bench_rank_select, bench_wavelet_matrix, bench_wavelet_tree)
 from .common import save
 
 SUITES = {
     "wt": ("wavelet_tree.json", bench_wavelet_tree.run),
     "wm": ("wavelet_matrix.json", bench_wavelet_matrix.run),
+    "construction": ("construction.json", bench_construction.run),
     "huffman": ("huffman.json", bench_huffman.run),
     "multiary": ("multiary.json", bench_multiary.run),
     "rank_select": ("rank_select.json", bench_rank_select.run),

@@ -18,6 +18,12 @@ python -m repro.launch.index --smoke
 echo "== range analytics smoke =="
 python -m repro.launch.analytics --smoke
 
+# (fused-vs-oracle equivalence and the interpret-mode kernel tests —
+# tests/test_construction_fast.py, tests/test_kernels.py — already run as
+# part of the tier-1 suite above; the bench smoke is the extra coverage)
+echo "== construction fast-path smoke =="
+python -m benchmarks.run --only construction --fast
+
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== benchmarks (fast) =="
     python -m benchmarks.run --fast

@@ -8,23 +8,29 @@ count-then-refine quantiles, shard-vector top-k frontier, histogram-union
 distinct).
 
 Single-matrix ops live in ``range_ops``; the sharded serving layer in
-``engine``; the fused Pallas quantile kernel in ``repro.kernels``
-(``wm_quantile_batch``).
+``engine``; the fused Pallas quantile kernels in ``repro.kernels``
+(``wm_quantile_batch`` for one matrix, ``wm_quantile_sharded_batch`` —
+surfaced as ``sharded_range_quantile_fused`` — for the stacked shard
+layout); persisted snapshots in ``snapshot`` (serving restarts skip the
+build).
 """
 from .engine import (ShardedAnalytics, build_sharded_analytics,
                      local_ranges, sharded_range_count,
                      sharded_range_distinct, sharded_range_histogram,
-                     sharded_range_quantile, sharded_range_topk,
-                     sharded_range_topk_greedy)
+                     sharded_range_quantile, sharded_range_quantile_fused,
+                     sharded_range_topk, sharded_range_topk_greedy)
 from .range_ops import (range_count, range_distinct, range_histogram,
                         range_quantile, range_topk, range_topk_greedy,
                         topk_slot_budget)
+from .snapshot import load_analytics, save_analytics, snapshot_meta
 
 __all__ = [
     "ShardedAnalytics", "build_sharded_analytics", "local_ranges",
     "sharded_range_count", "sharded_range_distinct",
     "sharded_range_histogram", "sharded_range_quantile",
+    "sharded_range_quantile_fused",
     "sharded_range_topk", "sharded_range_topk_greedy",
     "range_count", "range_distinct", "range_histogram", "range_quantile",
     "range_topk", "range_topk_greedy", "topk_slot_budget",
+    "load_analytics", "save_analytics", "snapshot_meta",
 ]

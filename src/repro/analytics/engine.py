@@ -110,6 +110,20 @@ def sharded_range_quantile(shards: WaveletMatrix, shard_bits: int, n: int,
     return jnp.where(empty, jnp.asarray(-1, _I32), sym)
 
 
+def sharded_range_quantile_fused(shards: WaveletMatrix, shard_bits: int,
+                                 n: int, lo, hi, k,
+                                 interpret: bool | None = None) -> jax.Array:
+    """Kernel form of ``sharded_range_quantile``: the whole count-then-
+    refine descent (all shards × all levels) runs as ONE fused Pallas
+    launch per query block (``kernels.wm_quantile_sharded_batch``), with
+    every shard's bitmaps + rank directories resident in VMEM. Exact same
+    results; (Q,) batches only (the XLA path broadcasts arbitrary shapes).
+    """
+    from repro.kernels import ops as _kops
+    return _kops.wm_quantile_sharded_batch(shards, shard_bits, n, lo, hi, k,
+                                           interpret=interpret)
+
+
 def sharded_range_topk(shards: WaveletMatrix, shard_bits: int, n: int,
                        lo, hi, k: int):
     """Exact global top-k: per-shard histograms sum, then one ``top_k``.
@@ -211,7 +225,14 @@ class ShardedAnalytics:
                    shard_bits=corpus.shard_bits)
 
     # ---- batched queries (each one jittable, vmapped internally) -------
-    def range_quantile(self, lo, hi, k) -> jax.Array:
+    def range_quantile(self, lo, hi, k, use_kernel: bool = False
+                       ) -> jax.Array:
+        """Global k-th smallest in [lo, hi). ``use_kernel`` routes (Q,)
+        batches through the fused sharded Pallas descent (one launch per
+        query block, identical results)."""
+        if use_kernel:
+            return sharded_range_quantile_fused(self.shards, self.shard_bits,
+                                                self.n, lo, hi, k)
         return sharded_range_quantile(self.shards, self.shard_bits, self.n,
                                       lo, hi, k)
 

@@ -1,0 +1,117 @@
+"""Persisted analytics snapshots: save/restore a ``ShardedAnalytics``
+engine through ``repro.checkpoint`` so serving restarts skip the build.
+
+The stacked shard pytree is written with the atomic checkpoint layout
+(``arrays.npz`` + ``meta.json``); the corpus geometry (n, sigma,
+shard_bits, select sample rate) travels in ``meta.json``. Restore
+reconstructs the exact pytree *structure* — every static field and leaf
+shape is derivable from the geometry, because all shards share one static
+shape — builds a ``ShapeDtypeStruct`` target from it, and loads the
+arrays back into place. Round-trips are bit-exact (all leaves are integer
+arrays), so a restored engine answers every query identically to the one
+that was saved.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.core.rank_select import (BLOCK_WORDS, SUPERBLOCK_WORDS,
+                                    BinaryRank, BinarySelect, BitVector)
+from repro.core.wavelet_matrix import WaveletMatrix, num_levels
+
+from .engine import ShardedAnalytics
+
+_SNAPSHOT_STEP = 0
+
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def shards_struct(num_shards: int, sigma: int, shard_size: int,
+                  sample_rate: int) -> WaveletMatrix:
+    """ShapeDtypeStruct pytree of a stacked (S,)-leaf ``WaveletMatrix``.
+
+    Mirrors exactly what ``build_wavelet_matrix`` + leaf-wise stacking
+    produces for ``num_shards`` shards of ``shard_size`` positions each —
+    the restore target for :func:`load_analytics`.
+    """
+    nbits = num_levels(sigma)
+    W = (shard_size + 31) // 32
+    nsb = (W + SUPERBLOCK_WORDS - 1) // SUPERBLOCK_WORDS
+    nblk = (W + BLOCK_WORDS - 1) // BLOCK_WORDS
+    nsamp = shard_size // sample_rate + 2
+    lead = (num_shards, nbits)
+    rank = BinaryRank(words=_struct(lead + (W,), jnp.uint32),
+                      superblock=_struct(lead + (nsb,), jnp.uint32),
+                      block=_struct(lead + (nblk,), jnp.uint16),
+                      n=shard_size)
+
+    def sel(zeros: bool) -> BinarySelect:
+        return BinarySelect(sample=_struct(lead + (nsamp,), jnp.int32),
+                            n=shard_size, sample_rate=sample_rate,
+                            zeros=zeros)
+
+    bv = BitVector(rank=rank, sel1=sel(False), sel0=sel(True))
+    return WaveletMatrix(bitvectors=bv,
+                         zeros=_struct(lead, jnp.int32),
+                         n=shard_size, nbits=nbits)
+
+
+def save_analytics(engine: ShardedAnalytics, directory: str | Path,
+                   extra_meta: Optional[dict] = None) -> Path:
+    """Atomically persist the engine (stacked shard pytree + geometry).
+
+    ``extra_meta`` rides along in ``meta.json`` — callers use it to record
+    corpus identity (e.g. a seed or content hash) so a restore can be
+    validated against the stream it is meant to serve.
+    """
+    sample_rate = engine.shards.bitvectors.sel1.sample_rate
+    meta = {
+        "kind": "sharded_analytics",
+        "n": int(engine.n),
+        "sigma": int(engine.sigma),
+        "shard_bits": int(engine.shard_bits),
+        "num_shards": int(engine.num_shards),
+        "sample_rate": int(sample_rate),
+    }
+    if extra_meta:
+        meta.update(extra_meta)
+    return save_checkpoint(directory, _SNAPSHOT_STEP, engine.shards,
+                           extra_meta=meta, keep=1)
+
+
+def snapshot_meta(directory: str | Path,
+                  step: Optional[int] = None) -> dict:
+    """Read a snapshot's ``meta.json`` (geometry + caller extras) WITHOUT
+    loading the arrays — the cheap pre-restore compatibility probe."""
+    import json
+
+    from repro.checkpoint.checkpoint import latest_step
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no snapshot under {directory}")
+    meta = json.loads((Path(directory) / f"step_{step:08d}" /
+                       "meta.json").read_text())
+    if meta.get("kind") != "sharded_analytics":
+        raise ValueError(f"{directory} does not hold an analytics snapshot "
+                         f"(kind={meta.get('kind')!r})")
+    return meta
+
+
+def load_analytics(directory: str | Path,
+                   step: Optional[int] = None) -> ShardedAnalytics:
+    """Restore a :func:`save_analytics` snapshot into a fresh engine."""
+    meta = snapshot_meta(directory, step=step)
+    target = shards_struct(meta["num_shards"], meta["sigma"],
+                           1 << meta["shard_bits"], meta["sample_rate"])
+    shards, _ = restore_checkpoint(directory, target,
+                                   step=meta.get("step", _SNAPSHOT_STEP))
+    return ShardedAnalytics(shards=shards, n=meta["n"], sigma=meta["sigma"],
+                            shard_bits=meta["shard_bits"])

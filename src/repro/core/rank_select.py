@@ -296,6 +296,87 @@ def build_bitvector(words: jax.Array, n: int,
     return BitVector(rank=rank, sel1=sel1, sel0=sel0)
 
 
+def build_bitvector_levels(words: jax.Array, n: int,
+                           sample_rate: int = 512,
+                           use_kernels: bool = False,
+                           interpret: bool | None = None) -> BitVector:
+    """Batched directory build over stacked level bitmaps (fast-path form).
+
+    ``words``: (L, W) — one packed n-bit bitmap per row. Builds the rank
+    superblock/block tables and both select sample directories for every
+    level in one vmapped/fused launch group instead of L separate
+    ``build_bitvector`` calls, and returns a ``BitVector`` whose leaves all
+    carry the leading (L,) axis — the exact stacked layout ``WaveletMatrix``
+    stores. Bit-identical to stacking per-level ``build_bitvector`` results.
+
+    ``use_kernels`` routes the rank tables through the Pallas
+    ``rank_build_levels`` kernel (one launch for all levels, paper Theorem
+    5.1); the select samples stay XLA (they are O(W) per level).
+    """
+    if use_kernels:
+        from repro.kernels import ops as _kops
+        superblock, block = _kops.rank_build_levels(words, n,
+                                                    interpret=interpret)
+        rank = BinaryRank(words=words, superblock=superblock, block=block,
+                          n=n)
+    else:
+        rank = jax.vmap(lambda w: build_binary_rank(w, n))(words)
+    sel1 = jax.vmap(
+        lambda w: build_binary_select(w, n, sample_rate, zeros=False))(words)
+    sel0 = jax.vmap(
+        lambda w: build_binary_select(w, n, sample_rate, zeros=True))(words)
+    return BitVector(rank=rank, sel1=sel1, sel0=sel0)
+
+
+def stable_partition_gather(words: jax.Array, total_zeros: jax.Array,
+                            n: int) -> jax.Array:
+    """Gather permutation of the stable 0/1 partition, via select (no sort,
+    no scatter of n elements).
+
+    ``words``: the packed n-bit partition-flag bitmap (padding bits past n
+    must be 0); ``total_zeros``: number of 0 flags. Returns ``g`` (n,) int32
+    with ``g[p]`` = source index of the element that lands at position p —
+    i.e. ``out = x[g]`` realizes the partition (zeros first, ones after,
+    both in original order).
+
+    This is the construction-side payoff of the paper's Section 5 select
+    structures: position p takes element ``select0(p)`` (or
+    ``select1(p - Z)``), so the whole permutation is one word-granularity
+    select directory — per-word popcounts + two prefix sums (O(n/log n)
+    work, Theorem 5.1), run starts scattered at *word* granularity
+    (O(n/log n) indices), a running max to assign each position its word,
+    and a branchless in-word select. Everything past the tiny run-start
+    scatter is vectorized gathers/arithmetic, which is why this formulation
+    beats the scatter-based inverse permutation on CPU/TPU backends where
+    n-element scatters serialize.
+    """
+    W = words.shape[0]
+    pc = bitops.popcount(words).astype(_I32)                  # ones per word
+    valid = jnp.clip(n - jnp.arange(W, dtype=_I32) * bitops.WORD_BITS,
+                     0, bitops.WORD_BITS)
+    zc = valid - pc                                           # zeros (no pad)
+    zcum = jnp.cumsum(zc) - zc                                # exclusive
+    ocum = jnp.cumsum(pc) - pc
+    Z = jnp.asarray(total_zeros, _I32)
+    # Mark the output start of every word's zero-run and one-run, then a
+    # running max assigns each output position the word that feeds it
+    # (empty runs are superseded by the next run sharing their start).
+    wid = jnp.arange(W, dtype=_I32)
+    marks = jnp.zeros((n,), _I32)
+    marks = marks.at[zcum].max(wid, mode="drop")
+    marks = marks.at[Z + ocum].max(W + wid, mode="drop")
+    cm = jax.lax.cummax(marks)
+    p = jnp.arange(n, dtype=_I32)
+    is_one = p >= Z
+    w = jnp.where(is_one, cm - W, cm)
+    r = jnp.where(is_one, p - Z - ocum[w], p - zcum[w])       # rank in word
+    word = words[w]
+    # zeros half selects in the complemented word; padding bits sit past
+    # every valid zero, so r always lands on a real bit
+    wsel = jnp.where(is_one, word, ~word)
+    return w * bitops.WORD_BITS + bitops.select_in_word(wsel, r)
+
+
 def bitvector_bits(bv: BitVector) -> int:
     """Total storage in bits (bitmap + directories)."""
     return sum(l.size * l.dtype.itemsize * 8 for l in jax.tree.leaves(bv))

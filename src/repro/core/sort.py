@@ -9,13 +9,18 @@ provide the two TPU-native realizations (both stable):
 * ``backend="counting"`` — LSD counting sort built from histograms + prefix
   sums: O(n + 2^pass_bits) work per pass and O(log n) scan depth. This is the
   paper-faithful backend — "stable integer sort via prefix sums" — and
-  vectorizes over the whole array. For wide digits it processes fixed-size
-  blocks under ``lax.map`` to bound the one-hot working set (the same
-  block-local-count-then-scan structure as the paper's domain-decomposition
-  merge).
+  vectorizes over the whole array. For wide digits the stable rank runs
+  blocked (per-block histogram → cross-block scan → within-block rank, the
+  same block-local-count-then-scan structure as the paper's domain-
+  decomposition merge): on TPU through the Pallas ``kernels.radix_rank``
+  kernel (the one-hot never leaves VMEM), elsewhere through an XLA
+  realization that vectorizes groups of blocks under a bounded one-hot
+  working set.
 * ``backend="xla"`` — ``jax.lax.sort`` (stable), the vendor-shipped sort.
 
-Both are benchmarked against each other in ``benchmarks/run.py``.
+Both are benchmarked against each other in ``benchmarks/run.py``. The
+counting backend is the paper's Theorem 4.5 big-node sort and also drives
+every suffix-array doubling round (``repro.index.suffix_array``).
 """
 from __future__ import annotations
 
@@ -28,9 +33,13 @@ import jax.numpy as jnp
 from .scan import exclusive_sum
 
 # One-hot rank computation is fully vectorized when the bucket count is at
-# most this; beyond it, blocks are processed under lax.map to bound memory.
+# most this; beyond it, the blocked path bounds the one-hot working set.
 _VECTORIZED_BUCKET_LIMIT = 32
 _BLOCK = 512
+# The blocked path vectorizes groups of blocks as long as the group's
+# one-hot stays under this many int32 elements; larger problems fall back
+# to lax.map over the groups.
+_ONEHOT_BUDGET = 1 << 25
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets",))
@@ -52,45 +61,85 @@ def _counting_rank_vectorized(digits: jax.Array, num_buckets: int) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "block"))
-def _counting_rank_blocked(digits: jax.Array, num_buckets: int,
-                           block: int = _BLOCK) -> jax.Array:
-    """Memory-lean stable counting rank.
+def _blocked_rank_parts(digits: jax.Array, num_buckets: int,
+                        block: int = _BLOCK):
+    """Memory-lean within-bucket stable rank + bucket totals.
 
-    Per-block histograms are scanned across blocks (giving each block its
-    per-bucket offset), and the within-block equal-before counts are computed
-    one block at a time under ``lax.map``. Padding elements go to a sentinel
-    bucket placed after all real buckets, so they never disturb real ranks.
+    Returns ``(within, totals)``: ``within[i]`` = # of j < i with
+    digits[j] == digits[i]; ``totals`` the (num_buckets + 1,) histogram
+    (sentinel bucket last) — so callers that also need bucket bases don't
+    histogram the array a second time.
+
+    Per-block histogram → cross-block exclusive scan (each block's
+    per-bucket offset) → within-block equal-before counts. The within-block
+    one-hots are vectorized over groups of blocks sized to the
+    ``_ONEHOT_BUDGET`` working set, with ``lax.map`` over the groups only
+    when the problem exceeds one group — so moderate inputs (e.g. every
+    suffix-array doubling round) run as a single fused XLA op. Padding
+    elements go to a sentinel bucket after all real buckets.
     """
     n = digits.shape[0]
-    pad = (-n) % block
+    B1 = num_buckets + 1
+    nb = -(-n // block)
+    # blocks per group, clamped so small inputs never pad past their own
+    # block count (a group larger than nb would inflate the one-hot)
+    group = max(1, min(_ONEHOT_BUDGET // (block * B1), nb))
+    ng = -(-nb // group)
+    pad = ng * group * block - n
     sentinel = num_buckets
     d = jnp.concatenate([digits.astype(jnp.int32),
                          jnp.full((pad,), sentinel, jnp.int32)])
     nb = d.shape[0] // block
     db = d.reshape(nb, block)
-    B1 = num_buckets + 1
 
     blk_ids = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), block)
     flat = blk_ids * B1 + d
     block_hist = jnp.zeros((nb * B1,), jnp.int32).at[flat].add(1).reshape(nb, B1)
-    bucket_base = exclusive_sum(block_hist.sum(axis=0))          # (B1,)
     across = exclusive_sum(block_hist, axis=0)                   # (nb, B1)
 
-    def block_rank(dblk):
-        onehot = jax.nn.one_hot(dblk, B1, dtype=jnp.int32)
-        within = exclusive_sum(onehot, axis=0)
-        return jnp.take_along_axis(within, dblk[:, None], axis=1)[:, 0]
+    def group_rank(dg):                                          # (g, block)
+        onehot = jax.nn.one_hot(dg, B1, dtype=jnp.int32)
+        within = exclusive_sum(onehot, axis=1)
+        return jnp.take_along_axis(within, dg[..., None], axis=2)[..., 0]
 
-    rank_within = jax.lax.map(block_rank, db)                    # (nb, block)
-    dest = bucket_base[db] + jnp.take_along_axis(across, db, axis=1) + rank_within
-    return dest.reshape(-1)[:n]
+    dgrp = db.reshape(ng, group, block)
+    if ng == 1:
+        rank_within = group_rank(dgrp[0])                        # (nb, block)
+    else:
+        rank_within = jax.lax.map(group_rank, dgrp).reshape(nb, block)
+    out = jnp.take_along_axis(across, db, axis=1) + rank_within
+    return out.reshape(-1)[:n], jnp.sum(block_hist, axis=0)
 
 
-def counting_rank(digits: jax.Array, num_buckets: int) -> jax.Array:
-    """Stable sort destinations (a permutation when there is no padding)."""
-    if num_buckets <= _VECTORIZED_BUCKET_LIMIT or digits.shape[0] <= 4 * _BLOCK:
+def counting_rank(digits: jax.Array, num_buckets: int,
+                  use_kernel: bool | None = None) -> jax.Array:
+    """Stable sort destinations (a permutation when there is no padding).
+
+    dest[i] = (# elements with smaller digit) + (# j<i with equal digit) —
+    the paper's "stable integer sort via prefix sums" (Section 2), used as
+    the big-node sort of Theorem 4.5 and by every suffix-array doubling
+    round. Routing: small bucket counts use the fully vectorized one-hot;
+    large ones the blocked histogram→scan→within-block path — through the
+    Pallas ``kernels.radix_rank`` kernel when ``use_kernel`` (default: on
+    TPU) and the bucket count fits its VMEM bound, else the XLA blocked
+    realization.
+    """
+    n = digits.shape[0]
+    if num_buckets <= _VECTORIZED_BUCKET_LIMIT or n <= 4 * _BLOCK:
         return _counting_rank_vectorized(digits, num_buckets)
-    return _counting_rank_blocked(digits, num_buckets)
+    if use_kernel is None:
+        # the radix_rank kernels are stateless (no cross-grid scratch), so
+        # the route is safe under jit/vmap and gates on the backend alone
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels import ops as _kops
+        from repro.kernels import radix_rank as _rr
+        if num_buckets <= _rr.MAX_BUCKETS:
+            return _kops.radix_rank(digits, num_buckets)
+    digits = digits.astype(jnp.int32)
+    within, totals = _blocked_rank_parts(digits, num_buckets)
+    bucket_base = exclusive_sum(totals)
+    return bucket_base[digits] + within
 
 
 def bucket_ranks(digits: jax.Array, num_buckets: int) -> jax.Array:
@@ -99,12 +148,16 @@ def bucket_ranks(digits: jax.Array, num_buckets: int) -> jax.Array:
     The arrival-order rank inside each bucket — the same prefix-sum
     machinery as the stable counting sort, exposed for consumers like MoE
     token dispatch (DESIGN.md §3.2) where the bucket offset is implicit
-    (capacity slots) rather than a sort destination.
+    (capacity slots) rather than a sort destination. Small bucket counts
+    use the fully vectorized one-hot; large ones route through the blocked
+    path instead of materializing the O(n·B) matrix.
     """
     digits = digits.astype(jnp.int32)
-    onehot = jax.nn.one_hot(digits, num_buckets, dtype=jnp.int32)
-    within = exclusive_sum(onehot, axis=0)
-    return jnp.take_along_axis(within, digits[:, None], axis=1)[:, 0]
+    if num_buckets <= _VECTORIZED_BUCKET_LIMIT or digits.shape[0] <= 4 * _BLOCK:
+        onehot = jax.nn.one_hot(digits, num_buckets, dtype=jnp.int32)
+        within = exclusive_sum(onehot, axis=0)
+        return jnp.take_along_axis(within, digits[:, None], axis=1)[:, 0]
+    return _blocked_rank_parts(digits, num_buckets)[0]
 
 
 def _invert_permutation(dest: jax.Array) -> jax.Array:

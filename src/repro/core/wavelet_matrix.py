@@ -15,6 +15,21 @@ arrays; each in-between level is a stable 0/1 partition of the narrow array
 direct stable counting sort on the reversed τ-bit key (``"radix"``), or
 (c) XLA's stable sort (``"xla"``). Full-width symbols move only once per τ
 levels — the τ-fold traffic saving that the paper's work bound expresses.
+
+Construction fast path (default, ``fused=True``): each in-chunk level is
+applied as a *gather* whose permutation comes from the select formulation
+of the stable partition (``rank_select.stable_partition_gather`` — the
+Theorem 5.1 word-rank/select directory, built per level in O(n/log n)
+work, answers "which element lands at position p"), the composed
+permutation advances only when a compose big step will consume it, and all
+``nbits`` rank/select directories are built as one batched launch group
+(``rank_select.build_bitvector_levels``). On TPU the per-level step and
+the batched rank tables can further route through the Pallas kernels
+``kernels.wm_level`` (bit extract + bitmap pack + zero count + stable
+destinations in a single launch over the narrow short list) and
+``kernels.rank_build`` (all levels' Jacobson tables in one launch); the
+big-step counting sort routes through ``kernels.radix_rank`` via
+``core.sort.counting_rank``. Outputs are bit-identical on every path.
 """
 from __future__ import annotations
 
@@ -26,9 +41,10 @@ import jax
 import jax.numpy as jnp
 
 from . import bitops
-from .rank_select import (BitVector, access_bit, build_bitvector, rank0,
-                          rank1, select0, select1)
-from .scan import stable_partition_indices
+from .rank_select import (BitVector, access_bit, build_bitvector,
+                          build_bitvector_levels, rank0, rank1, select0,
+                          select1, stable_partition_gather)
+from .scan import apply_permutation_dest, stable_partition_indices
 from .sort import _invert_permutation, sort_pass
 
 _U32 = jnp.uint32
@@ -66,13 +82,47 @@ def _pack_level(bit: jax.Array) -> jax.Array:
 
 def build_wavelet_matrix(seq: jax.Array, sigma: int, tau: int = 8,
                          big_step: str = "compose",
-                         sample_rate: int = 512) -> WaveletMatrix:
+                         sample_rate: int = 512,
+                         fused: bool = True,
+                         use_kernels: bool | None = None) -> WaveletMatrix:
     """τ-chunked parallel construction (paper Theorem 4.5).
 
     ``tau`` plays the paper's τ = √(log n) role; 8 (byte-aligned) is the TPU
     sweet spot (DESIGN.md §2 assumption 4). ``big_step`` selects how the
     every-τ-levels reshuffle of the full-width symbols is realized.
+
+    ``fused=True`` (default) takes the construction fast path: the
+    per-level stable partition is applied as a *gather* whose permutation
+    comes from the paper's own select machinery
+    (``rank_select.stable_partition_gather`` — Theorem 5.1 structures
+    driving the Theorem 4.5 build), the composed permutation is carried
+    only when a compose big step actually needs it, and all ``nbits``
+    rank/select directories are built in one batched launch group
+    (``build_bitvector_levels``). ``fused=False`` is the historical XLA
+    step-by-step path (scatter-based inverse permutations, per-level
+    directory builds) kept as the benchmark baseline.
+
+    ``use_kernels`` routes the per-level step and the batched rank tables
+    through the Pallas kernels (``kernels.wm_level`` /
+    ``kernels.rank_build``); ``None`` auto-enables them on TPU. Those two
+    kernels carry cross-grid scratch state, so they must not be batched:
+    the ``None`` default disables them when the builder sees a batching
+    tracer as input (direct ``vmap``, as in the shard builds). The guard
+    cannot see through ``vmap``-of-``jit`` composition — callers wrapping
+    a *jitted* builder in ``vmap`` on TPU must pass ``use_kernels=False``
+    themselves. Passing ``use_kernels=True`` overrides the guard.
+
+    Output is bit-identical across ``fused``/``use_kernels``/``big_step``
+    settings (and to ``build_wavelet_matrix_levelwise``).
     """
+    if use_kernels is None:
+        from jax.interpreters import batching
+        use_kernels = (jax.default_backend() == "tpu"
+                       and not isinstance(seq, batching.BatchTracer))
+    if not fused:
+        return _build_wavelet_matrix_steps(seq, sigma, tau, big_step,
+                                           sample_rate)
+
     n = int(seq.shape[0])
     nbits = num_levels(sigma)
     order = seq.astype(_U32)
@@ -85,6 +135,75 @@ def build_wavelet_matrix(seq: jax.Array, sigma: int, tau: int = 8,
         fld = bitops.extract_field(order, jnp.uint32(nbits - alpha0 - width),
                                    width)
         sub = fld                       # narrow working array ("short list")
+        last_chunk = alpha0 + width >= nbits
+        # The composed permutation is materialized only when the compose
+        # big step will consume it (the historical path carried it always).
+        need_idx = (not last_chunk) and big_step == "compose"
+        idx = jnp.arange(n, dtype=jnp.int32) if need_idx else None
+        for t in range(width):
+            shift = width - 1 - t
+            last_level = (alpha0 + t == nbits - 1)
+            # Movement is needed to arrange the *next* level's bitmap; at
+            # the chunk's final level only the composed permutation (if
+            # any) still advances — radix/xla big steps re-sort from the
+            # chunk-start order and subsume it.
+            move = (not last_level) and (t < width - 1 or need_idx)
+            if use_kernels:
+                from repro.kernels import ops as _kops
+                dest, words, z = _kops.wm_level_step_fused(sub, shift, n)
+                level_words.append(words)
+                zeros.append(z)
+                if move:
+                    if t < width - 1:
+                        sub = apply_permutation_dest(sub, dest)
+                    if need_idx:
+                        idx = apply_permutation_dest(idx, dest)
+            else:
+                bit = (sub >> _U32(shift)) & _U32(1)
+                words = _pack_level(bit)
+                z = jnp.int32(n) - jnp.sum(bit, dtype=jnp.int32)
+                level_words.append(words)
+                zeros.append(z)
+                if move:
+                    g = stable_partition_gather(words, z, n)
+                    if t < width - 1:
+                        sub = sub[g]
+                    if need_idx:
+                        idx = idx[g]
+        if not last_chunk:
+            if big_step == "compose":
+                order = order[idx]
+            elif big_step in ("radix", "xla"):
+                rev = reverse_bits(fld, width)
+                backend = "counting" if big_step == "radix" else "xla"
+                order, _ = sort_pass(order, rev, 1 << width, backend=backend)
+            else:
+                raise ValueError(f"unknown big_step {big_step!r}")
+
+    stacked = build_bitvector_levels(jnp.stack(level_words), n, sample_rate,
+                                     use_kernels=use_kernels)
+    return WaveletMatrix(bitvectors=stacked, zeros=jnp.stack(zeros),
+                         n=n, nbits=nbits)
+
+
+def _build_wavelet_matrix_steps(seq: jax.Array, sigma: int, tau: int = 8,
+                                big_step: str = "compose",
+                                sample_rate: int = 512) -> WaveletMatrix:
+    """Historical step-by-step XLA realization of Theorem 4.5 (benchmark
+    baseline for the fused fast path): per-level scatter-based inverse
+    permutations, unconditionally composed permutation, per-level
+    directory builds."""
+    n = int(seq.shape[0])
+    nbits = num_levels(sigma)
+    order = seq.astype(_U32)
+    level_words: List[jax.Array] = []
+    zeros: List[jax.Array] = []
+
+    for alpha0 in range(0, nbits, tau):
+        width = min(tau, nbits - alpha0)
+        fld = bitops.extract_field(order, jnp.uint32(nbits - alpha0 - width),
+                                   width)
+        sub = fld
         perm = None                     # composed gather permutation
         for t in range(width):
             bit = (sub >> _U32(width - 1 - t)) & _U32(1)

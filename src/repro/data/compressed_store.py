@@ -171,10 +171,14 @@ def build_compressed_corpus(tokens: np.ndarray, sigma: int,
         toks = np.concatenate([toks, np.zeros(pad, np.uint32)])
     shards_np = toks.reshape(num_shards, shard_size)
 
+    # The builder picks its own kernel route: Pallas on TPU, mechanically
+    # falling back to the (fully batchable) XLA fast path when vmapped.
+    # jit_loop compiles the whole builder once on the sequential path so
+    # every shard reuses one executable.
     stacked = build_shards_stacked(
         lambda s: build_wavelet_matrix(s, sigma, tau=tau, big_step=big_step,
                                        sample_rate=sample_rate),
-        shards_np, parallel=parallel)
+        shards_np, parallel=parallel, jit_loop=True)
 
     hist = np.zeros((num_shards, sigma), np.int64)
     for i, s in enumerate(shards_np):

@@ -27,13 +27,20 @@ import jax.numpy as jnp
 
 
 def build_shards_stacked(build_one: Callable, shards: jax.Array, *,
-                         parallel: str | bool = "auto"):
+                         parallel: str | bool = "auto",
+                         jit_loop: bool = False):
     """Build one pytree per shard row and stack them leaf-wise.
 
     ``shards``: (num_shards, shard_size) array (any integer dtype).
     ``parallel``: "auto" | True | False as described in the module doc.
     pmap requires ``num_shards`` divisible by the device count; otherwise
     the traced path falls back to a single vmap.
+
+    ``jit_loop=True`` jits ``build_one`` once on the sequential-loop path,
+    so every shard reuses one compiled whole-builder executable instead of
+    dispatching op-by-op (all shards share one static shape). Leave it off
+    for builders that exploit concrete values in loop mode (e.g. the
+    suffix-array doubling early exit).
     """
     shards = jnp.asarray(shards)
     num_shards = shards.shape[0]
@@ -52,7 +59,8 @@ def build_shards_stacked(build_one: Callable, shards: jax.Array, *,
         mode = "vmap"                  # ragged over devices → one program
 
     if mode == "loop" or num_shards == 1:
-        built = [build_one(shards[s]) for s in range(num_shards)]
+        fn = jax.jit(build_one) if jit_loop else build_one
+        built = [fn(shards[s]) for s in range(num_shards)]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *built)
     if mode == "vmap":
         return jax.vmap(build_one)(shards)

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from . import bitpack as _bitpack
+from . import radix_rank as _radix_rank
 from . import rank_build as _rank_build
 from . import wm_level as _wm_level
 from . import wm_quantile as _wm_quantile
@@ -84,12 +85,100 @@ def wm_level_step(sub: jax.Array, shift: int, n: int,
     return dest[0, :n], bitmap[0, :wreal], total[0, 0]
 
 
+@functools.partial(jax.jit, static_argnames=("n", "interpret"))
+def rank_build_levels(words: jax.Array, n: int,
+                      interpret: bool | None = None):
+    """Batched Jacobson directories for L stacked level bitmaps, one
+    launch. ``words``: (L, W) uint32 packed bits (n bits per row).
+
+    Returns (superblock uint32 (L, ceil(W/32)), block_rel uint16
+    (L, ceil(W/4))) — row-wise identical to ``rank_build``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    nlev = words.shape[0]
+    w = (n + 31) // 32
+    sw = _rank_build.STEP_WORDS
+    wpad = ((w + sw - 1) // sw) * sw
+    wp = jnp.zeros((nlev, wpad), jnp.uint32).at[:, :words.shape[1]].set(words)
+    block_rel, superblock = _rank_build.rank_build_levels_pallas(
+        wp, interpret=interpret)
+    nsb = (w + _rank_build.SUPERBLOCK_WORDS - 1) // _rank_build.SUPERBLOCK_WORDS
+    nblk = (w + _rank_build.BLOCK_WORDS - 1) // _rank_build.BLOCK_WORDS
+    return superblock[:, :nsb], block_rel[:, :nblk]
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "n", "interpret"))
+def wm_level_step_fused(sub: jax.Array, shift: int, n: int,
+                        interpret: bool | None = None):
+    """Single-launch fused wavelet-matrix level (tentpole form of
+    ``wm_level_step``): bit extract, bitmap pack, zero count and stable
+    partition destinations in ONE kernel launch over the narrow short
+    list. Same contract as ``wm_level_step``. Not vmap-safe (cross-grid
+    scratch) — batched builders use the XLA fast path instead.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    blk = _wm_level.BLOCK
+    npad = ((n + blk - 1) // blk) * blk
+    pad_val = jnp.uint32(1) << jnp.uint32(shift)
+    sp = jnp.full((1, npad), pad_val, jnp.uint32).at[0, :n].set(
+        sub.astype(jnp.uint32))
+    dest, bitmap, total = _wm_level.wm_level_fused_pallas(
+        sp, shift, n, interpret=interpret)
+    wreal = (n + 31) // 32
+    return dest[0, :n], bitmap[0, :wreal], total[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))
+def radix_rank(digits: jax.Array, num_buckets: int,
+               interpret: bool | None = None) -> jax.Array:
+    """Blocked stable counting rank (Pallas): destination of every element
+    under a stable sort by ``digits`` (each in [0, num_buckets),
+    num_buckets ≤ ``radix_rank.MAX_BUCKETS``). Same contract as
+    ``core.sort.counting_rank``; the per-block one-hot lives only in VMEM.
+    """
+    assert num_buckets <= _radix_rank.MAX_BUCKETS
+    if interpret is None:
+        interpret = _default_interpret()
+    n = digits.shape[0]
+    blk = _radix_rank.BLOCK
+    npad = ((n + blk - 1) // blk) * blk
+    d = jnp.full((1, npad), num_buckets, jnp.int32).at[0, :n].set(
+        digits.astype(jnp.int32))
+    hist = _radix_rank.radix_hist_pallas(d, num_buckets,
+                                         interpret=interpret)
+    across = jnp.cumsum(hist, axis=0, dtype=jnp.int32) - hist
+    totals = jnp.sum(hist, axis=0, dtype=jnp.int32)
+    base = (jnp.cumsum(totals) - totals).reshape(1, -1)
+    dest = _radix_rank.radix_apply_pallas(d, base, across, num_buckets,
+                                          interpret=interpret)
+    return dest[0, :n]
+
+
 def _pad_axis1(x: jax.Array, mult: int) -> jax.Array:
     pad = (-x.shape[1]) % mult
     if pad:
         x = jnp.concatenate(
             [x, jnp.zeros((x.shape[0], pad), x.dtype)], axis=1)
     return x
+
+
+def _pad_rank_rows(words: jax.Array, superblock: jax.Array,
+                   block: jax.Array, nblocks: int):
+    """Lane-pad the row-stacked rank-directory arrays for the quantile
+    kernels: word rows grow to ≥ nblocks·BLOCK_WORDS (so every directory
+    block can gather all its words) and everything pads to 128 lanes."""
+    words = _pad_axis1(words, 128)
+    if words.shape[1] < nblocks * _wm_quantile.BLOCK_WORDS:
+        words = _pad_axis1(
+            jnp.concatenate(
+                [words, jnp.zeros((words.shape[0],
+                                   nblocks * _wm_quantile.BLOCK_WORDS
+                                   - words.shape[1]), words.dtype)],
+                axis=1), 128)
+    return (words, _pad_axis1(superblock, 128),
+            _pad_axis1(block.astype(jnp.int32), 128))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -114,19 +203,49 @@ def wm_quantile_batch(wm, lo: jax.Array, hi: jax.Array, k: jax.Array,
 
     rank = wm.bitvectors.rank                 # leaves carry (nbits,) axis
     nblocks = rank.block.shape[1]
-    # pad the word rows so every directory block can gather all 4 words
-    words = _pad_axis1(rank.words, 128)
-    if words.shape[1] < nblocks * _wm_quantile.BLOCK_WORDS:
-        words = _pad_axis1(
-            jnp.concatenate(
-                [words, jnp.zeros((words.shape[0],
-                                   nblocks * _wm_quantile.BLOCK_WORDS
-                                   - words.shape[1]), words.dtype)],
-                axis=1), 128)
-    superblock = _pad_axis1(rank.superblock, 128)
-    block = _pad_axis1(rank.block.astype(jnp.int32), 128)
+    words, superblock, block = _pad_rank_rows(rank.words, rank.superblock,
+                                              rank.block, nblocks)
     zeros = wm.zeros.reshape(1, -1)
     out = _wm_quantile.wm_quantile_pallas(
         queries, words, superblock, block, zeros,
         n=wm.n, nblocks=nblocks, interpret=interpret)
+    return out[0, :q]
+
+
+@functools.partial(jax.jit, static_argnames=("shard_bits", "n", "interpret"))
+def wm_quantile_sharded_batch(shards, shard_bits: int, n: int,
+                              lo: jax.Array, hi: jax.Array, k: jax.Array,
+                              interpret: bool | None = None) -> jax.Array:
+    """Batched global range-quantile over a stacked (S,)-leaf shard layout
+    via the fused sharded Pallas descent (all shards × all levels in one
+    launch per query block).
+
+    ``shards``: a ``WaveletMatrix`` whose leaves carry a leading
+    (num_shards,) axis (the ``ShardedAnalytics``/``CompressedCorpus``
+    layout); ``lo``/``hi``/``k``: (Q,) int32 *global* positions / rank.
+    Exact same contract as ``analytics.engine.sharded_range_quantile``.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    lo = jnp.atleast_1d(jnp.asarray(lo, jnp.int32))
+    hi = jnp.atleast_1d(jnp.asarray(hi, jnp.int32))
+    k = jnp.atleast_1d(jnp.asarray(k, jnp.int32))
+    q = lo.shape[0]
+    qpad = ((q + _wm_quantile.QBLOCK - 1)
+            // _wm_quantile.QBLOCK) * _wm_quantile.QBLOCK
+    queries = jnp.zeros((3, qpad), jnp.int32)
+    queries = queries.at[0, :q].set(lo).at[1, :q].set(hi).at[2, :q].set(k)
+
+    rank = shards.bitvectors.rank
+    num_shards, nbits = rank.words.shape[0], shards.nbits
+    nblocks = rank.block.shape[2]
+    words, superblock, block = _pad_rank_rows(
+        rank.words.reshape(num_shards * nbits, -1),
+        rank.superblock.reshape(num_shards * nbits, -1),
+        rank.block.reshape(num_shards * nbits, -1), nblocks)
+    zeros = shards.zeros.reshape(1, num_shards * nbits)
+    out = _wm_quantile.wm_quantile_sharded_pallas(
+        queries, words, superblock, block, zeros,
+        num_shards=num_shards, nbits=nbits, n=n, shard_bits=shard_bits,
+        nblocks=nblocks, interpret=interpret)
     return out[0, :q]

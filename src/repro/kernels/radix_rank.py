@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: blocked stable counting rank (the paper's big-node
+stable-integer-sort primitive, Section 2 / Theorem 4.5's one-sort-per-τ).
+
+``counting_rank`` needs, for every element, ``bucket_base[d] +
+rank_within_bucket`` — the classic stable-counting-sort destination. The
+XLA realizations either materialize an O(n·B) one-hot matrix in HBM or
+serialize blocks under ``lax.map``. This kernel keeps the one-hot strictly
+in VMEM and runs two sequential-grid passes:
+
+  phase 1 (``radix_hist_pallas``)  — per-block bucket histograms
+       (BLOCK×(B+1) one-hot reduced in VMEM → (B+1,) counts per block);
+  phase 2 (``radix_apply_pallas``) — given the exclusive cross-block
+       offsets and the global bucket bases (two tiny XLA scans over the
+       (nblocks, B+1) histogram matrix), emit each element's destination:
+       ``base[d] + across[block, d] + within_block_rank``. The within-block
+       rank and the per-element gathers from the offset rows are expressed
+       as masked one-hot sums, so the kernel is pure VPU arithmetic — no
+       gathers, no HBM one-hot.
+
+Padding convention: the wrapper pads the digit array with a sentinel
+bucket B (placed after every real bucket), so padded elements rank past
+every real element and are trimmed.
+
+Geometry: 1024 digits per grid step; VMEM ≈ 1024×(B+1)×4 B for the
+one-hot (B ≤ 512 → ≤ 2.1 MB) plus the (B+1,) offset rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+MAX_BUCKETS = 512      # one-hot VMEM bound: BLOCK×(MAX_BUCKETS+1)×4 B
+
+_I32 = jnp.int32
+
+
+def _onehot(d, nb1):
+    """(1, BLOCK) int32 digits → (BLOCK, nb1) int32 one-hot, in VMEM."""
+    cols = jax.lax.broadcasted_iota(_I32, (BLOCK, nb1), 1)
+    return (d.reshape(BLOCK, 1) == cols).astype(_I32)
+
+
+def _hist_kernel(d_ref, hist_ref, *, nb1):
+    oh = _onehot(d_ref[...], nb1)
+    hist_ref[...] = jnp.sum(oh, axis=0, dtype=_I32).reshape(1, nb1)
+
+
+def radix_hist_pallas(digits: jax.Array, num_buckets: int, *,
+                      interpret: bool = False) -> jax.Array:
+    """``digits``: (1, N) int32 in [0, num_buckets] (== num_buckets is the
+    padding sentinel), N a multiple of BLOCK → (N/BLOCK, B+1) histograms."""
+    _, n = digits.shape
+    assert n % BLOCK == 0
+    nblocks = n // BLOCK
+    nb1 = num_buckets + 1
+    return pl.pallas_call(
+        functools.partial(_hist_kernel, nb1=nb1),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((1, nb1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, nb1), _I32),
+        interpret=interpret,
+    )(digits)
+
+
+def _apply_kernel(d_ref, base_ref, across_ref, dest_ref, *, nb1):
+    oh = _onehot(d_ref[...], nb1)                            # (BLOCK, nb1)
+    excl = jnp.cumsum(oh, axis=0, dtype=_I32) - oh
+    within = jnp.sum(excl * oh, axis=1, dtype=_I32)          # (BLOCK,)
+    offs = base_ref[...] + across_ref[...]                   # (1, nb1)
+    picked = jnp.sum(oh * offs, axis=1, dtype=_I32)          # offs[d_i]
+    dest_ref[...] = (within + picked).reshape(1, BLOCK)
+
+
+def radix_apply_pallas(digits: jax.Array, base: jax.Array,
+                       across: jax.Array, num_buckets: int, *,
+                       interpret: bool = False) -> jax.Array:
+    """Phase 2: ``base``: (1, B+1) global bucket bases; ``across``:
+    (N/BLOCK, B+1) exclusive cross-block bucket offsets. Returns
+    (1, N) int32 stable destinations."""
+    _, n = digits.shape
+    assert n % BLOCK == 0
+    nblocks = n // BLOCK
+    nb1 = num_buckets + 1
+    return pl.pallas_call(
+        functools.partial(_apply_kernel, nb1=nb1),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            pl.BlockSpec((1, nb1), lambda i: (0, 0)),
+            pl.BlockSpec((1, nb1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, n), _I32),
+        interpret=interpret,
+    )(digits, base, across)

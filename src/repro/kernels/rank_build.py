@@ -9,6 +9,11 @@ paper's prefix sum, exploiting that the TPU grid executes in order.
 
 Block geometry: 512 words (= 16 superblocks) per grid step; VMEM footprint
 512×4 B in + 128×2 B + 16×4 B out.
+
+``rank_build_levels_pallas`` is the batched form used by the construction
+fast path: a (L, steps) grid builds the directories of every wavelet-matrix
+level in ONE launch, resetting the popcount carry at the start of each
+level row.
 """
 from __future__ import annotations
 
@@ -64,6 +69,54 @@ def rank_build_pallas(words: jax.Array, *, interpret: bool = False):
         out_shape=[
             jax.ShapeDtypeStruct((1, w // BLOCK_WORDS), jnp.uint16),
             jax.ShapeDtypeStruct((1, w // SUPERBLOCK_WORDS), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 1), jnp.uint32)],
+        interpret=interpret,
+    )(words)
+
+
+def _rank_build_levels_kernel(words_ref, block_ref, super_ref, carry_ref):
+    j = pl.program_id(1)                    # step within the level's row
+
+    @pl.when(j == 0)
+    def _reset():                           # new level row → fresh prefix
+        carry_ref[0, 0] = jnp.uint32(0)
+
+    carry = carry_ref[0, 0]
+    words = words_ref[...]                                   # (1, 512)
+    counts = jax.lax.population_count(words).astype(jnp.uint32)
+    local_excl = jnp.cumsum(counts, axis=1, dtype=jnp.uint32) - counts
+    prefix = local_excl + carry
+    sb = prefix[:, ::SUPERBLOCK_WORDS]                       # (1, 16)
+    super_ref[...] = sb
+    blk = prefix[:, ::BLOCK_WORDS]                           # (1, 128)
+    sb_broadcast = jnp.repeat(sb, _BLK_PER_SB, axis=1)       # (1, 128)
+    block_ref[...] = (blk - sb_broadcast).astype(jnp.uint16)
+    carry_ref[0, 0] = carry + jnp.sum(counts, dtype=jnp.uint32)
+
+
+def rank_build_levels_pallas(words: jax.Array, *, interpret: bool = False):
+    """Batched Jacobson build: one launch for every level of a wavelet
+    matrix. ``words``: (L, W) uint32, W a multiple of STEP_WORDS; the grid
+    is (L, W/STEP_WORDS) with the running popcount carry reset at the
+    start of each level row (the sequential TPU grid iterates the inner
+    step axis fastest). Returns (block_rel (L, W/4) uint16,
+    superblock (L, W/32) uint32). Not vmap-safe (cross-step scratch).
+    """
+    nlev, w = words.shape
+    assert w % STEP_WORDS == 0
+    grid = (nlev, w // STEP_WORDS)
+    return pl.pallas_call(
+        _rank_build_levels_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, STEP_WORDS), lambda l, j: (l, j))],
+        out_specs=[
+            pl.BlockSpec((1, _BLK_PER_STEP), lambda l, j: (l, j)),
+            pl.BlockSpec((1, _SB_PER_STEP), lambda l, j: (l, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nlev, w // BLOCK_WORDS), jnp.uint16),
+            jax.ShapeDtypeStruct((nlev, w // SUPERBLOCK_WORDS), jnp.uint32),
         ],
         scratch_shapes=[pltpu.SMEM((1, 1), jnp.uint32)],
         interpret=interpret,

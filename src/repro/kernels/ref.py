@@ -62,6 +62,67 @@ def wm_quantile_ref(level_words: jax.Array, zeros: jax.Array, n: int,
     return jnp.where(empty, jnp.asarray(-1, jnp.int32), sym)
 
 
+def radix_rank_ref(digits: jax.Array, num_buckets: int) -> jax.Array:
+    """Stable counting-sort destinations (exact integer semantics).
+
+    dest[i] = # elements with smaller digit + # j<i with equal digit —
+    the inverse of a stable argsort by digit."""
+    del num_buckets
+    n = digits.shape[0]
+    order = jnp.argsort(digits.astype(jnp.int32), stable=True)
+    return jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32), unique_indices=True)
+
+
+def rank_build_levels_ref(words: jax.Array, n: int):
+    """Row-wise ``rank_build_ref`` over stacked (L, W) level bitmaps."""
+    outs = [rank_build_ref(words[l], n) for l in range(words.shape[0])]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
+
+
+def wm_quantile_sharded_ref(level_words: jax.Array, zeros: jax.Array,
+                            shard_bits: int, n: int,
+                            lo: jax.Array, hi: jax.Array,
+                            k: jax.Array) -> jax.Array:
+    """Global sharded range-quantile oracle from raw per-shard bitmaps.
+
+    ``level_words``: (S, nbits, W) packed per-shard level bitmaps (shards
+    cover ``2**shard_bits`` positions each); ``zeros``: (S, nbits).
+    Count-then-refine descent with dense per-shard prefix sums — the
+    cross-shard analogue of ``wm_quantile_ref``.
+    """
+    S, nbits, _ = level_words.shape
+    size = 1 << shard_bits
+    cum0 = []
+    for s in range(S):
+        bits = jnp.stack([bitops.unpack_bits(level_words[s, l], size)
+                          for l in range(nbits)]).astype(jnp.int32)
+        cum0.append(jnp.concatenate(
+            [jnp.zeros((nbits, 1), jnp.int32),
+             jnp.cumsum(1 - bits, axis=1, dtype=jnp.int32)], axis=1))
+    lo = jnp.clip(jnp.asarray(lo, jnp.int32), 0, n)
+    hi = jnp.clip(jnp.asarray(hi, jnp.int32), lo, n)
+    los = [jnp.clip(lo - s * size, 0, size) for s in range(S)]
+    his = [jnp.clip(hi - s * size, 0, size) for s in range(S)]
+    total = sum(h - l for l, h in zip(los, his))
+    k = jnp.clip(jnp.asarray(k, jnp.int32), 0, jnp.maximum(total - 1, 0))
+    empty = total <= 0
+    sym = jnp.zeros_like(k)
+    for l in range(nbits):
+        lo0s = [cum0[s][l][los[s]] for s in range(S)]
+        hi0s = [cum0[s][l][his[s]] for s in range(S)]
+        z = sum(h0 - l0 for l0, h0 in zip(lo0s, hi0s))
+        bit = (k >= z).astype(jnp.int32)
+        sym = (sym << 1) | bit
+        k = jnp.where(bit == 1, k - z, k)
+        for s in range(S):
+            zl = zeros[s, l]
+            los[s] = jnp.where(bit == 1, zl + (los[s] - lo0s[s]), lo0s[s])
+            his[s] = jnp.where(bit == 1, zl + (his[s] - hi0s[s]), hi0s[s])
+    return jnp.where(empty, jnp.asarray(-1, jnp.int32), sym)
+
+
 def wm_level_step_ref(sub: jax.Array, shift: int, n: int):
     """(dest, bitmap, total_zeros) for one wavelet-matrix level."""
     sub = sub[:n].astype(jnp.uint32)

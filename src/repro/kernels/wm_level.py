@@ -1,23 +1,34 @@
 """Pallas TPU kernels: one fused wavelet-matrix level step.
 
 A wavelet-matrix level does three things with the narrow (τ-bit) keys:
-extract the level's bit, emit the packed bitmap, and compute the stable
-0/1-partition destination of every element. The destination of a one needs
-the *global* zero count, so the step is two sequential-grid passes (the
-classic two-phase scan):
+extract the level's bit, emit the packed bitmap, count zeros, and compute
+the stable 0/1-partition destination of every element. The destination of
+a one needs the *global* zero count, so the computation is two passes (the
+classic two-phase scan). Two realizations:
 
+* Two launches (historical):
   phase 1 (``wm_counts_pallas``)  — per-block zero counts;
   phase 2 (``wm_apply_pallas``)   — given the exclusive block offsets and
        the total, emit destinations and the packed bitmap in one pass.
        ``ones_before(block) = block_start − zeros_before(block)``, so only
        the zero offsets travel between phases.
 
+* ONE launch (``wm_level_fused_pallas``, the construction fast path): the
+  grid is (2, nblocks) and the TPU grid executes sequentially, so pass 0
+  accumulates the per-block zero counts into a VMEM scratch that persists
+  across the whole grid, and pass 1 reads the scratch (total + running
+  carry in SMEM) to emit destinations, bitmap words, and the zero count —
+  no XLA ops between phases, no HBM round-trip for the offsets. Because
+  the scratch carries cross-step state, this kernel must NOT be wrapped in
+  ``vmap`` (use the two-launch pair or the XLA fast path for batched
+  builds).
+
 Padding convention: the wrapper pads keys so that padded elements read as
 ones; their destinations land past n and are trimmed, while bitmap bits at
 padded positions are masked to 0 (rank directories require zero padding).
 
 Block geometry: 1024 keys/grid step; VMEM ≈ 1024×4 B keys + 1024×4 B dest
-+ 32×4 B bitmap words.
++ 32×4 B bitmap words (+ nblocks×4 B count scratch for the fused form).
 """
 from __future__ import annotations
 
@@ -26,6 +37,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 BLOCK = 1024
 _WPB = BLOCK // 32      # bitmap words per block
@@ -75,6 +87,80 @@ def _apply_kernel(sub_ref, zexcl_ref, total_ref, dest_ref, bm_ref,
     shifts = jax.lax.broadcasted_iota(jnp.uint32, b2.shape, 1)
     bm_ref[...] = jnp.sum(b2 << shifts, axis=1, dtype=jnp.uint32
                           ).reshape(1, _WPB)
+
+
+def _fused_kernel(sub_ref, dest_ref, bm_ref, z_ref, cnt_ref, carry_ref,
+                  *, shift, n_valid):
+    p = pl.program_id(0)                        # 0: count, 1: apply
+    i = pl.program_id(1)
+    sub = sub_ref[...]                                      # (1, BLOCK)
+    bit = ((sub >> jnp.uint32(shift)) & jnp.uint32(1)).astype(jnp.int32)
+    cnt = jnp.int32(BLOCK) - jnp.sum(bit, dtype=jnp.int32)
+
+    @pl.when(p == 0)
+    def _count():
+        cnt_ref[0, i] = cnt
+
+    @pl.when((p == 1) & (i == 0))
+    def _init():
+        carry_ref[0, 0] = jnp.int32(0)
+        carry_ref[0, 1] = jnp.sum(cnt_ref[...], dtype=jnp.int32)
+
+    zeros_before = carry_ref[0, 0]
+    total_zeros = carry_ref[0, 1]
+    idx_local = jax.lax.broadcasted_iota(jnp.int32, bit.shape, 1)
+    zeros_local_excl = jnp.cumsum(1 - bit, axis=1) - (1 - bit)
+    ones_local_excl = idx_local - zeros_local_excl
+    ones_before = i * BLOCK - zeros_before
+    dest = jnp.where(bit == 0,
+                     zeros_before + zeros_local_excl,
+                     total_zeros + ones_before + ones_local_excl)
+    dest_ref[...] = dest
+    gidx = i * BLOCK + idx_local
+    bm_bit = jnp.where(gidx < n_valid, bit, 0).astype(jnp.uint32)
+    b2 = bm_bit.reshape(_WPB, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, b2.shape, 1)
+    bm_ref[...] = jnp.sum(b2 << shifts, axis=1, dtype=jnp.uint32
+                          ).reshape(1, _WPB)
+    z_ref[0, 0] = total_zeros
+
+    @pl.when(p == 1)
+    def _advance():
+        carry_ref[0, 0] = zeros_before + cnt
+
+
+def wm_level_fused_pallas(sub: jax.Array, shift: int, n_valid: int, *,
+                          interpret: bool = False):
+    """Single-launch fused level step (count pass + apply pass in one grid).
+
+    ``sub``: (1, N) uint32 keys, N a multiple of BLOCK, padded with ones.
+    Returns (dest (1, N) int32, bitmap (1, N/32) uint32,
+    total_zeros (1, 1) int32). Pass 0 writes garbage to the dest/bitmap
+    blocks; pass 1 revisits every block and overwrites it with the real
+    values (the sequential TPU grid guarantees the ordering). Not
+    vmap-safe — the scratch carries state across the whole grid.
+    """
+    _, n = sub.shape
+    assert n % BLOCK == 0
+    nblocks = n // BLOCK
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, shift=shift, n_valid=n_valid),
+        grid=(2, nblocks),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda p, i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda p, i: (0, i)),
+            pl.BlockSpec((1, _WPB), lambda p, i: (0, i)),
+            pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, nblocks), jnp.int32),
+                        pltpu.SMEM((1, 2), jnp.int32)],
+        interpret=interpret,
+    )(sub)
 
 
 def wm_apply_pallas(sub: jax.Array, zeros_excl: jax.Array,

@@ -83,6 +83,85 @@ def _quantile_kernel(q_ref, words_ref, super_ref, block_ref, zeros_ref,
     out_ref[0, :] = jnp.where(empty, jnp.asarray(-1, _I32), sym)
 
 
+def _sharded_quantile_kernel(q_ref, words_ref, super_ref, block_ref,
+                             zeros_ref, out_ref, *, num_shards, nbits, n,
+                             shard_bits, nblocks):
+    """Count-then-refine descent over S stacked shards, fully fused.
+
+    Per level: every shard probes rank0 at its local interval endpoints
+    (rows ``s*nbits + l`` of the stacked structure arrays), the zero counts
+    are summed across shards, the branch is taken on the *global* k, and
+    every shard steps to the same child — the kernel realization of
+    ``analytics.engine.sharded_range_quantile``.
+    """
+    size = 1 << shard_bits
+    glo = jnp.clip(q_ref[0, :], 0, n)
+    ghi = jnp.clip(q_ref[1, :], glo, n)
+    los = [jnp.clip(glo - s * size, 0, size) for s in range(num_shards)]
+    his = [jnp.clip(ghi - s * size, 0, size) for s in range(num_shards)]
+    total = sum(h - l for l, h in zip(los, his))
+    k = jnp.clip(q_ref[2, :], 0, jnp.maximum(total - 1, 0))
+    empty = total <= 0
+    sym = jnp.zeros_like(k)
+    for l in range(nbits):                      # static unroll over levels
+        lo0s, hi0s = [], []
+        for s in range(num_shards):             # ... and over shards
+            row = s * nbits + l
+            words_row = words_ref[row, :]
+            super_row = super_ref[row, :]
+            block_row = block_ref[row, :]
+            lo0s.append(los[s] - _rank1_level(words_row, super_row,
+                                              block_row, nblocks, los[s]))
+            hi0s.append(his[s] - _rank1_level(words_row, super_row,
+                                              block_row, nblocks, his[s]))
+        z = sum(h0 - l0 for l0, h0 in zip(lo0s, hi0s))
+        bit = (k >= z).astype(_I32)
+        sym = (sym << 1) | bit
+        k = jnp.where(bit == 1, k - z, k)
+        for s in range(num_shards):
+            zl = zeros_ref[0, s * nbits + l]
+            los[s] = jnp.where(bit == 1, zl + (los[s] - lo0s[s]), lo0s[s])
+            his[s] = jnp.where(bit == 1, zl + (his[s] - hi0s[s]), hi0s[s])
+    out_ref[0, :] = jnp.where(empty, jnp.asarray(-1, _I32), sym)
+
+
+def wm_quantile_sharded_pallas(queries: jax.Array, words: jax.Array,
+                               superblock: jax.Array, block: jax.Array,
+                               zeros: jax.Array, *, num_shards: int,
+                               nbits: int, n: int, shard_bits: int,
+                               nblocks: int,
+                               interpret: bool = False) -> jax.Array:
+    """Fused sharded quantile descent: one launch per query block for the
+    ENTIRE stacked (S,)-leaf layout.
+
+    ``queries``: (3, Q) int32 rows (global lo, hi, k), Q a multiple of
+    QBLOCK. ``words``/``superblock``/``block``/``zeros`` are the per-shard
+    per-level arrays flattened to a leading (S·nbits,) row axis (row
+    ``s*nbits + l``); see ``wm_quantile_pallas`` for the per-row layout
+    contract. VMEM holds the whole stacked structure
+    (≈ S·nbits·(W + W/4 + W/32)·4 B), which bounds the shard count × shard
+    size this kernel serves. Returns (1, Q) int32 (-1 ⇔ empty)."""
+    _, q = queries.shape
+    assert q % QBLOCK == 0
+    grid = (q // QBLOCK,)
+    return pl.pallas_call(
+        functools.partial(_sharded_quantile_kernel, num_shards=num_shards,
+                          nbits=nbits, n=n, shard_bits=shard_bits,
+                          nblocks=nblocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3, QBLOCK), lambda i: (0, i)),
+            pl.BlockSpec(words.shape, lambda i: (0, 0)),
+            pl.BlockSpec(superblock.shape, lambda i: (0, 0)),
+            pl.BlockSpec(block.shape, lambda i: (0, 0)),
+            pl.BlockSpec(zeros.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, QBLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, q), _I32),
+        interpret=interpret,
+    )(queries, words, superblock, block, zeros)
+
+
 def wm_quantile_pallas(queries: jax.Array, words: jax.Array,
                        superblock: jax.Array, block: jax.Array,
                        zeros: jax.Array, *, n: int, nblocks: int,

@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.analytics import build_sharded_analytics
+from repro.analytics import (build_sharded_analytics, load_analytics,
+                             save_analytics, snapshot_meta)
 from repro.data import make_corpus
 from repro.launch.mesh import make_host_mesh, set_mesh
 
@@ -59,6 +60,10 @@ def main():
     ap.add_argument("--verify", type=int, default=16,
                     help="# of queries per op to check against numpy")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--snapshot-dir", type=str, default=None,
+                    help="persisted analytics snapshot: restore from here "
+                         "when present (skipping the build), else build "
+                         "and save here")
     args = ap.parse_args()
     if args.smoke:
         args.n = min(args.n, 1 << 14)
@@ -70,15 +75,45 @@ def main():
                       np.int64)
 
     t0 = time.perf_counter()
-    eng = build_sharded_analytics(toks, args.vocab,
-                                  shard_bits=args.shard_bits)
+    restored = False
+    save_snapshot = bool(args.snapshot_dir)
+    if args.snapshot_dir:
+        # probe meta.json BEFORE restoring arrays: geometry AND corpus
+        # identity (seed) must match what this invocation will verify
+        # against, else a stale snapshot would serve the wrong corpus
+        try:
+            meta = snapshot_meta(args.snapshot_dir)
+            got = (meta["n"], meta["sigma"], meta["shard_bits"],
+                   meta.get("corpus_seed"))
+            want = (args.n, args.vocab, args.shard_bits, args.seed)
+            if got == want:
+                eng = load_analytics(args.snapshot_dir)
+                restored = True
+            else:
+                print(f"snapshot (n, vocab, shard_bits, seed)={got} does "
+                      f"not match requested {want} — rebuilding")
+        except FileNotFoundError:
+            pass
+        except ValueError as e:
+            # foreign checkpoint in the directory: rebuild, but never
+            # overwrite someone else's data with our snapshot
+            print(f"ignoring --snapshot-dir: {e}")
+            save_snapshot = False
+    if not restored:
+        eng = build_sharded_analytics(toks, args.vocab,
+                                      shard_bits=args.shard_bits)
     jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
     t_build = time.perf_counter() - t0
-    print(f"build: {args.n} tokens, vocab {args.vocab}, "
+    verb = "restore" if restored else "build"
+    print(f"{verb}: {args.n} tokens, vocab {args.vocab}, "
           f"{eng.num_shards} shards of {eng.shard_size} in {t_build:.2f}s "
           f"({args.n / t_build / 1e3:.0f} ktok/s, "
           f"{eng.bits_per_token():.1f} bits/token, "
           f"{jax.local_device_count()} device(s))")
+    if save_snapshot and not restored:
+        path = save_analytics(eng, args.snapshot_dir,
+                              extra_meta={"corpus_seed": args.seed})
+        print(f"snapshot saved → {path}")
 
     lo, hi, k = make_queries(args.n, args.queries, args.seed + 1)
     loj, hij, kj = jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(k)

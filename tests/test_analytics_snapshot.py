@@ -1,0 +1,70 @@
+"""Persisted analytics snapshots: save → load must be bit-exact and the
+restored engine must answer queries identically (serving restarts skip
+the build)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (build_sharded_analytics, load_analytics,
+                             save_analytics)
+
+
+def _make_engine(n=3000, sigma=97, shard_bits=10, seed=0):
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, sigma, n).astype(np.int64)
+    return toks, build_sharded_analytics(toks, sigma, shard_bits=shard_bits)
+
+
+def test_snapshot_roundtrip_bit_exact(tmp_path):
+    _, eng = _make_engine()
+    save_analytics(eng, tmp_path)
+    eng2 = load_analytics(tmp_path)
+    assert (eng2.n, eng2.sigma, eng2.shard_bits) == (eng.n, eng.sigma,
+                                                     eng.shard_bits)
+    la, lb = jax.tree.leaves(eng), jax.tree.leaves(eng2)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_snapshot_restored_engine_serves_identically(tmp_path):
+    toks, eng = _make_engine(n=2500, sigma=64, shard_bits=9, seed=3)
+    save_analytics(eng, tmp_path)
+    eng2 = load_analytics(tmp_path)
+    rng = np.random.default_rng(1)
+    q = 64
+    lo = rng.integers(0, 2501, q).astype(np.int32)
+    hi = rng.integers(0, 2501, q).astype(np.int32)
+    lo, hi = np.minimum(lo, hi), np.maximum(lo, hi)
+    k = rng.integers(0, 2500, q).astype(np.int32)
+    loj, hij, kj = jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(k)
+    for name, a, b in [
+        ("quantile", eng.range_quantile(loj, hij, kj),
+         eng2.range_quantile(loj, hij, kj)),
+        ("distinct", eng.range_distinct(loj, hij),
+         eng2.range_distinct(loj, hij)),
+        ("count", eng.range_count(loj, hij, 3, 40),
+         eng2.range_count(loj, hij, 3, 40)),
+    ]:
+        assert np.array_equal(np.asarray(a), np.asarray(b)), name
+    # spot check against numpy on the raw stream
+    got = np.asarray(eng2.range_quantile(loj, hij, kj))
+    for i in range(16):
+        sl = np.sort(toks[lo[i]:hi[i]])
+        want = sl[min(k[i], len(sl) - 1)] if len(sl) else -1
+        assert got[i] == want, i
+
+
+def test_snapshot_rejects_foreign_checkpoint(tmp_path):
+    from repro.checkpoint import save_checkpoint
+    save_checkpoint(tmp_path, 0, {"w": jnp.zeros((3,))},
+                    extra_meta={"kind": "model"})
+    with pytest.raises(ValueError):
+        load_analytics(tmp_path)
+
+
+def test_snapshot_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_analytics(tmp_path / "nope")

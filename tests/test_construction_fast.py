@@ -1,0 +1,111 @@
+"""Construction fast path vs the levelwise oracle (bit-identical contract).
+
+The acceptance bar for the fused builder: every leaf of the produced
+``WaveletMatrix`` (bitvector words, zeros, rank superblock/block tables,
+select samples) must equal the levelwise baseline's exactly, across
+alphabet sizes, τ, big-step backends, and awkward (odd / non-multiple-of-
+block) lengths — on the XLA fast path, the historical step path, and the
+kernel (interpret-mode) path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wavelet_matrix import (build_wavelet_matrix,
+                                       build_wavelet_matrix_levelwise)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+@pytest.mark.parametrize("sigma", [2, 256, 1 << 16])
+@pytest.mark.parametrize("tau", [4, 8])
+@pytest.mark.parametrize("big_step", ["compose", "radix", "xla"])
+def test_fused_matches_levelwise_oracle(sigma, tau, big_step):
+    rng = np.random.default_rng(sigma * 31 + tau)
+    for n in (1, 2, 33, 777, 1025):          # odd / non-block-multiple n
+        seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+        fused = build_wavelet_matrix(seq, sigma, tau=tau, big_step=big_step,
+                                     sample_rate=128)
+        oracle = build_wavelet_matrix_levelwise(seq, sigma, sample_rate=128)
+        assert _leaves_equal(fused, oracle), (n, sigma, tau, big_step)
+
+
+@pytest.mark.parametrize("tau", [4, 8])
+@pytest.mark.parametrize("big_step", ["compose", "radix", "xla"])
+def test_fused_matches_step_path(tau, big_step):
+    """Fast path vs the historical step-by-step XLA path (fused=False)."""
+    rng = np.random.default_rng(7 * tau)
+    for n, sigma in ((501, 2), (1337, 256), (900, 1 << 16)):
+        seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+        fused = build_wavelet_matrix(seq, sigma, tau=tau, big_step=big_step,
+                                     sample_rate=128)
+        steps = build_wavelet_matrix(seq, sigma, tau=tau, big_step=big_step,
+                                     sample_rate=128, fused=False)
+        assert _leaves_equal(fused, steps), (n, sigma, tau, big_step)
+
+
+@pytest.mark.parametrize("sigma,tau", [(256, 8), (1 << 16, 8), (37, 4)])
+def test_kernel_path_matches(sigma, tau):
+    """use_kernels=True (Pallas, interpret mode off-TPU) is bit-identical."""
+    rng = np.random.default_rng(11)
+    seq = jnp.asarray(rng.integers(0, sigma, 1500).astype(np.uint32))
+    fused = build_wavelet_matrix(seq, sigma, tau=tau, sample_rate=128)
+    kern = build_wavelet_matrix(seq, sigma, tau=tau, sample_rate=128,
+                                use_kernels=True)
+    assert _leaves_equal(fused, kern)
+
+
+def test_fused_builder_is_jit_and_vmap_safe():
+    """The whole fast-path builder jits and vmaps (the shard-build modes)."""
+    import functools
+    rng = np.random.default_rng(3)
+    sigma, n, S = 97, 512, 4
+    shards = jnp.asarray(rng.integers(0, sigma, (S, n)).astype(np.uint32))
+    build = functools.partial(build_wavelet_matrix, sigma=sigma,
+                              sample_rate=128, use_kernels=False)
+    stacked = jax.vmap(build)(shards)
+    jitted = jax.jit(build)
+    for s in range(S):
+        one = jitted(shards[s])
+        got = jax.tree.map(lambda l: l[s], stacked)
+        assert _leaves_equal(one, got), s
+
+
+def test_queries_on_fused_build():
+    """End-to-end: access/rank/select answers on a fused build are exact."""
+    from repro.core.wavelet_matrix import wm_access, wm_rank, wm_select
+    rng = np.random.default_rng(5)
+    n, sigma = 2000, 300
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    wm = build_wavelet_matrix(jnp.asarray(seq), sigma, sample_rate=128)
+    assert np.array_equal(np.asarray(wm_access(wm, jnp.arange(n))), seq)
+    c = int(seq[0])
+    idx = np.unique(rng.integers(0, n + 1, 32))
+    r = np.asarray(wm_rank(wm, jnp.full(len(idx), c), jnp.asarray(idx)))
+    assert np.array_equal(r, [(seq[:i] == c).sum() for i in idx])
+    occ = np.flatnonzero(seq == c)
+    ks = np.arange(min(8, len(occ)))
+    s = np.asarray(wm_select(wm, jnp.full(len(ks), c), jnp.asarray(ks)))
+    assert np.array_equal(s, occ[ks])
+
+
+def test_shard_build_jit_loop_matches():
+    """jit_loop sequential builds equal the unjitted loop exactly."""
+    from repro.data.shard_build import build_shards_stacked
+    rng = np.random.default_rng(9)
+    shards = rng.integers(0, 64, (3, 256)).astype(np.uint32)
+
+    def build_one(s):
+        return build_wavelet_matrix(s, 64, sample_rate=128,
+                                    use_kernels=False)
+
+    a = build_shards_stacked(build_one, shards, parallel=False)
+    b = build_shards_stacked(build_one, shards, parallel=False,
+                             jit_loop=True)
+    assert _leaves_equal(a, b)

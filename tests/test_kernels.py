@@ -162,3 +162,124 @@ def test_wm_quantile_kernel_agrees_with_analytics_op():
     want = np.asarray(range_quantile(wm, jnp.asarray(lo), jnp.asarray(hi),
                                      jnp.asarray(k)))
     assert np.array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# wm_level_step_fused (single-launch fused level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 1023, 1024, 1025, 8192])
+@pytest.mark.parametrize("shift", [0, 3, 7])
+def test_wm_level_fused_shapes(n, shift):
+    rng = np.random.default_rng(n + shift)
+    sub = rng.integers(0, 256, n).astype(np.uint32)
+    d1, b1, t1 = ops.wm_level_step_fused(jnp.asarray(sub), shift, n)
+    d2, b2, t2 = ref.wm_level_step_ref(jnp.asarray(sub), shift, n)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert int(t1) == int(t2)
+
+
+def test_wm_level_fused_matches_two_launch_form():
+    rng = np.random.default_rng(21)
+    n, shift = 5000, 5
+    sub = jnp.asarray(rng.integers(0, 256, n).astype(np.uint32))
+    d1, b1, t1 = ops.wm_level_step_fused(sub, shift, n)
+    d2, b2, t2 = ops.wm_level_step(sub, shift, n)
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert int(t1) == int(t2)
+
+
+# ---------------------------------------------------------------------------
+# rank_build_levels (batched directory build)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 129, 16385, 131072])
+def test_rank_build_levels_shapes(n):
+    rng = np.random.default_rng(n)
+    nlev = 5
+    words = jnp.stack([
+        ref.bitpack_ref(jnp.asarray(rng.integers(0, 2, n).astype(np.uint8)))
+        for _ in range(nlev)])
+    sb, blk = ops.rank_build_levels(words, n)
+    sb2, blk2 = ref.rank_build_levels_ref(words, n)
+    assert sb.dtype == jnp.uint32 and blk.dtype == jnp.uint16
+    assert np.array_equal(np.asarray(sb), np.asarray(sb2))
+    assert np.array_equal(np.asarray(blk), np.asarray(blk2))
+
+
+def test_rank_build_levels_matches_per_level_kernel():
+    """Row l of the batched launch == the single-row kernel on row l
+    (the carry reset at each level row really isolates the rows)."""
+    rng = np.random.default_rng(4)
+    n, nlev = 40000, 4
+    words = jnp.stack([
+        ref.bitpack_ref(jnp.asarray((rng.random(n) < p).astype(np.uint8)))
+        for p in (0.1, 0.9, 0.5, 0.0)])
+    sb, blk = ops.rank_build_levels(words, n)
+    for l in range(nlev):
+        sb1, blk1 = ops.rank_build(words[l], n)
+        assert np.array_equal(np.asarray(sb[l]), np.asarray(sb1)), l
+        assert np.array_equal(np.asarray(blk[l]), np.asarray(blk1)), l
+
+
+# ---------------------------------------------------------------------------
+# radix_rank (blocked counting rank)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 1000, 1024, 5000])
+@pytest.mark.parametrize("nb", [2, 37, 256, 512])
+def test_radix_rank_shapes(n, nb):
+    rng = np.random.default_rng(n + nb)
+    d = rng.integers(0, nb, n).astype(np.int32)
+    got = np.asarray(ops.radix_rank(jnp.asarray(d), nb))
+    want = np.asarray(ref.radix_rank_ref(jnp.asarray(d), nb))
+    assert np.array_equal(got, want)
+
+
+def test_radix_rank_is_stable_permutation():
+    rng = np.random.default_rng(13)
+    n, nb = 4097, 256
+    d = rng.integers(0, nb, n).astype(np.int32)
+    dest = np.asarray(ops.radix_rank(jnp.asarray(d), nb))
+    assert sorted(dest.tolist()) == list(range(n))
+    inv = np.empty(n, np.int64)
+    inv[dest] = np.arange(n)
+    assert np.array_equal(inv, np.argsort(d, kind="stable"))
+
+
+# ---------------------------------------------------------------------------
+# wm_quantile_sharded (fused descent over the stacked (S,)-leaf layout)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,sigma,shard_bits", [(3000, 97, 10),
+                                                (4096, 256, 11),
+                                                (1500, 5, 9)])
+def test_wm_quantile_sharded_kernel(n, sigma, shard_bits):
+    from repro.analytics import (build_sharded_analytics,
+                                 sharded_range_quantile)
+    rng = np.random.default_rng(n + sigma)
+    toks = rng.integers(0, sigma, n).astype(np.int64)
+    eng = build_sharded_analytics(toks, sigma, shard_bits=shard_bits)
+    q = 300
+    lo = rng.integers(0, n + 1, q).astype(np.int32)
+    hi = rng.integers(0, n + 1, q).astype(np.int32)
+    lo, hi = np.minimum(lo, hi), np.maximum(lo, hi)
+    k = rng.integers(0, n, q).astype(np.int32)
+    got = np.asarray(ops.wm_quantile_sharded_batch(
+        eng.shards, eng.shard_bits, eng.n,
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(k)))
+    want = np.asarray(sharded_range_quantile(
+        eng.shards, eng.shard_bits, eng.n,
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(k)))
+    assert np.array_equal(got, want)
+    want_ref = np.asarray(ref.wm_quantile_sharded_ref(
+        eng.shards.bitvectors.rank.words, eng.shards.zeros,
+        eng.shard_bits, eng.n,
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(k)))
+    assert np.array_equal(got, want_ref)
+    for i in range(32):            # numpy oracle spot check
+        sl = np.sort(toks[lo[i]:hi[i]])
+        w = sl[min(k[i], len(sl) - 1)] if len(sl) else -1
+        assert got[i] == w, (i, lo[i], hi[i], k[i])

@@ -1,7 +1,7 @@
 """Property tests for prefix-sum primitives and stable integer sorting."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from hypothesis import given, settings, strategies as st
 
 from repro.core.scan import (exclusive_sum, segmented_exclusive_sum,
                              stable_partition_indices)
@@ -92,7 +92,7 @@ def test_sort_permutation_backends_agree(n, seed):
 
 
 def test_counting_rank_blocked_path():
-    """Force the lax.map blocked path (n > 4*block and many buckets)."""
+    """Force the blocked path (n > 4*block and many buckets)."""
     rng = np.random.default_rng(7)
     n, nb = 5000, 256
     digits = rng.integers(0, nb, n).astype(np.int32)
@@ -100,3 +100,45 @@ def test_counting_rank_blocked_path():
     inv = np.empty(n, np.int64)
     inv[dest] = np.arange(n)
     assert np.array_equal(inv, np.argsort(digits, kind="stable"))
+
+
+@given(st.sampled_from([2100, 5000, 70000]), st.sampled_from([256, 1000]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=6, deadline=None)
+def test_counting_rank_blocked_grouped(n, nb, seed):
+    """Blocked path across group sizes: stable permutation property holds
+    whether the within-block one-hots run as one fused op or under
+    lax.map over groups."""
+    digits = np.random.default_rng(seed).integers(0, nb, n).astype(np.int32)
+    dest = np.asarray(counting_rank(jnp.asarray(digits), nb))
+    assert sorted(dest.tolist()) == list(range(n))
+    inv = np.empty(n, np.int64)
+    inv[dest] = np.arange(n)
+    assert np.array_equal(inv, np.argsort(digits, kind="stable"))
+
+
+def test_counting_rank_kernel_route_matches():
+    """The Pallas radix_rank route (interpret off-TPU) == the XLA route."""
+    rng = np.random.default_rng(23)
+    n, nb = 6000, 200
+    digits = rng.integers(0, nb, n).astype(np.int32)
+    a = np.asarray(counting_rank(jnp.asarray(digits), nb, use_kernel=False))
+    b = np.asarray(counting_rank(jnp.asarray(digits), nb, use_kernel=True))
+    assert np.array_equal(a, b)
+
+
+@given(st.sampled_from([3000, 20000]), st.sampled_from([64, 300, 1024]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=6, deadline=None)
+def test_bucket_ranks_large_buckets(n, nb, seed):
+    """Large-B bucket_ranks routes through the blocked path (no O(n·B)
+    one-hot) and still returns exact arrival-order ranks."""
+    digits = np.random.default_rng(seed).integers(0, nb, n).astype(np.int32)
+    got = np.asarray(bucket_ranks(jnp.asarray(digits), nb))
+    order = np.argsort(digits, kind="stable")
+    expect = np.empty(n, np.int64)
+    counts = np.zeros(nb, np.int64)
+    for i in order:                    # arrival order within each bucket
+        expect[i] = counts[digits[i]]
+        counts[digits[i]] += 1
+    assert np.array_equal(got, expect)
