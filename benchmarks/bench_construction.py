@@ -1,4 +1,4 @@
-"""Construction fast path: before/after evidence for the fused builder.
+"""Construction fast path: before/after evidence for the fused builders.
 
 Rows per (n, σ): the levelwise prior-work baseline [Shun'15], the
 historical step-by-step XLA τ-chunk path (``fused=False`` — the "before"),
@@ -6,7 +6,13 @@ and the fused fast path (``fused=True`` — select-gather partitions,
 batched directory build). ``speedup_vs_xla`` on the fused rows is the
 headline number; the acceptance bar is ≥ 2× at n ≥ 2^20, σ = 256.
 
-A second section times the stable counting rank that drives the big-node
+The tree-family section extends the evidence to the *segmented*
+select-gather fast path: ``build_wavelet_tree`` (node-segmented
+partitions), the domain-decomposed variant (gather merge), the
+Huffman-shaped tree (static run tables + select-gather), and the multiary
+d-way split — each fused row against its own scatter baseline.
+
+A final section times the stable counting rank that drives the big-node
 sort and every suffix-array doubling round (one-hot-free blocked path).
 """
 from __future__ import annotations
@@ -17,9 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.huffman import build_huffman_wavelet_tree, huffman_codebook
+from repro.core.multiary import build_multiary_wavelet_tree
 from repro.core.sort import counting_rank
 from repro.core.wavelet_matrix import (build_wavelet_matrix,
                                        build_wavelet_matrix_levelwise)
+from repro.core.wavelet_tree import build_wavelet_tree, build_wavelet_tree_dd
 
 from .common import record, save, time_fn
 
@@ -52,6 +61,71 @@ def run(n: int = 1 << 20, out: list | None = None) -> list:
                melem_per_s=round(n / t_fused / 1e6, 1),
                speedup_vs_xla=round(t_xla / t_fused, 2),
                speedup_vs_levelwise=round(t_lvl / t_fused, 2))
+
+    # ---- tree family: segmented select-gather fast path ----------------
+    sigma = 256
+    seq = jnp.asarray(np.random.default_rng(2)
+                      .integers(0, sigma, n).astype(np.uint32))
+
+    f = jax.jit(functools.partial(build_wavelet_tree, sigma=sigma, tau=8,
+                                  fused=False))
+    t_xla = time_fn(f, seq, iters=3)
+    record(rows, f"wt_xla_tau8_n{n}_s{sigma}", t_xla,
+           melem_per_s=round(n / t_xla / 1e6, 1))
+    f = jax.jit(functools.partial(build_wavelet_tree, sigma=sigma, tau=8,
+                                  fused=True, use_kernels=False))
+    t_fused = time_fn(f, seq, iters=3)
+    record(rows, f"wt_fused_tau8_n{n}_s{sigma}", t_fused,
+           melem_per_s=round(n / t_fused / 1e6, 1),
+           speedup_vs_xla=round(t_xla / t_fused, 2))
+
+    chunks = 16
+    f = jax.jit(functools.partial(build_wavelet_tree_dd, sigma=sigma,
+                                  num_chunks=chunks, fused=False))
+    t_xla = time_fn(f, seq, iters=3)
+    record(rows, f"wt_dd_xla_P{chunks}_n{n}_s{sigma}", t_xla,
+           melem_per_s=round(n / t_xla / 1e6, 1))
+    f = jax.jit(functools.partial(build_wavelet_tree_dd, sigma=sigma,
+                                  num_chunks=chunks, fused=True))
+    t_fused = time_fn(f, seq, iters=3)
+    record(rows, f"wt_dd_fused_P{chunks}_n{n}_s{sigma}", t_fused,
+           melem_per_s=round(n / t_fused / 1e6, 1),
+           speedup_vs_xla=round(t_xla / t_fused, 2))
+
+    zipf = 1.2
+    p = np.arange(1, sigma + 1) ** (-zipf)
+    hseq = np.random.default_rng(3).choice(
+        sigma, size=n, p=p / p.sum()).astype(np.uint32)
+    freqs = np.bincount(hseq, minlength=sigma) + 1
+    codes, lengths, max_len = huffman_codebook(freqs)
+    cj, lj = jnp.asarray(codes), jnp.asarray(lengths)
+    hseqj = jnp.asarray(hseq)
+    # the codebook is closed over (concrete), so jit traces the fused
+    # run-table path; only the sequence is an argument
+    f = jax.jit(lambda s: build_huffman_wavelet_tree(s, cj, lj, max_len,
+                                                     fused=False))
+    t_xla = time_fn(f, hseqj, iters=3)
+    record(rows, f"huffman_xla_n{n}_s{sigma}_z{zipf}", t_xla,
+           melem_per_s=round(n / t_xla / 1e6, 1), height=max_len)
+    f = jax.jit(lambda s: build_huffman_wavelet_tree(s, cj, lj, max_len))
+    t_fused = time_fn(f, hseqj, iters=3)
+    record(rows, f"huffman_fused_n{n}_s{sigma}_z{zipf}", t_fused,
+           melem_per_s=round(n / t_fused / 1e6, 1), height=max_len,
+           speedup_vs_xla=round(t_xla / t_fused, 2))
+
+    for width in (2, 4):
+        f = jax.jit(functools.partial(build_multiary_wavelet_tree,
+                                      sigma=sigma, width=width,
+                                      fused=False))
+        t_xla = time_fn(f, seq, iters=3)
+        record(rows, f"multiary_xla_d{1 << width}_n{n}_s{sigma}", t_xla,
+               melem_per_s=round(n / t_xla / 1e6, 1))
+        f = jax.jit(functools.partial(build_multiary_wavelet_tree,
+                                      sigma=sigma, width=width))
+        t_fused = time_fn(f, seq, iters=3)
+        record(rows, f"multiary_fused_d{1 << width}_n{n}_s{sigma}", t_fused,
+               melem_per_s=round(n / t_fused / 1e6, 1),
+               speedup_vs_xla=round(t_xla / t_fused, 2))
 
     # the big-node / suffix-array sort primitive (8-bit digits)
     nb = 256

@@ -34,16 +34,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=sorted(SUITES), default=None)
     ap.add_argument("--fast", action="store_true",
-                    help="smaller n (CI-sized)")
+                    help="smaller n (CI-sized); results land in "
+                         "<suite>.fast.json so the full-size perf "
+                         "trajectory in results/bench/<suite>.json stays "
+                         "comparable across runs")
     args = ap.parse_args()
 
     todo = {args.only: SUITES[args.only]} if args.only else SUITES
     t0 = time.time()
     for key, (fname, fn) in todo.items():
         print(f"== {key} ==", flush=True)
-        kwargs = {}
+        # pass `out` so the suite never self-saves under its default name
+        # (a fast run must only ever touch the .fast.json artifact)
+        kwargs = {"out": []}
         if args.fast:
             kwargs["n"] = 1 << 16
+            fname = fname.replace(".json", ".fast.json")
         rows = fn(**kwargs)
         save(rows, fname)
     print(f"total {time.time() - t0:.1f}s")

@@ -19,10 +19,43 @@ echo "== range analytics smoke =="
 python -m repro.launch.analytics --smoke
 
 # (fused-vs-oracle equivalence and the interpret-mode kernel tests —
-# tests/test_construction_fast.py, tests/test_kernels.py — already run as
-# part of the tier-1 suite above; the bench smoke is the extra coverage)
+# tests/test_construction_fast.py, tests/test_segmented_construction.py,
+# tests/test_kernels.py — already run as part of the tier-1 suite above;
+# the bench smoke is the extra coverage. --fast writes to
+# results/bench/construction.fast.json so the full-size perf trajectory
+# in construction.json is never clobbered by CI-sized runs.)
 echo "== construction fast-path smoke =="
 python -m benchmarks.run --only construction --fast
+
+echo "== fused tree-family equality smoke =="
+python - <<'PY'
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.huffman import build_huffman_wavelet_tree, huffman_codebook
+from repro.core.multiary import build_multiary_wavelet_tree
+from repro.core.wavelet_tree import build_wavelet_tree, build_wavelet_tree_dd
+
+def eq(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+rng = np.random.default_rng(0)
+n, sigma = 999, 64
+seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+assert eq(build_wavelet_tree(seq, sigma),
+          build_wavelet_tree(seq, sigma, fused=False)), "tree"
+assert eq(build_wavelet_tree_dd(seq[:992], sigma, 8),
+          build_wavelet_tree_dd(seq[:992], sigma, 8, fused=False)), "dd"
+assert eq(build_multiary_wavelet_tree(seq, sigma, width=2),
+          build_multiary_wavelet_tree(seq, sigma, width=2,
+                                      fused=False)), "multiary"
+freqs = np.bincount(np.asarray(seq), minlength=sigma) + 1
+codes, lengths, max_len = huffman_codebook(freqs)
+cj, lj = jnp.asarray(codes), jnp.asarray(lengths)
+assert eq(build_huffman_wavelet_tree(seq, cj, lj, max_len),
+          build_huffman_wavelet_tree(seq, cj, lj, max_len,
+                                     fused=False)), "huffman"
+print("fused tree-family equality ✓")
+PY
 
 if [[ "${1:-}" == "--bench" ]]; then
     echo "== benchmarks (fast) =="

@@ -137,11 +137,13 @@ def sharded_range_topk(shards: WaveletMatrix, shard_bits: int, n: int,
 
 def sharded_range_topk_greedy(shards: WaveletMatrix, shard_bits: int,
                               n: int, lo, hi, k: int,
-                              budget: int | None = None):
+                              budget: int | None = None,
+                              prune: bool = True):
     """Greedy global top-k: ONE frontier whose nodes carry a per-shard
     interval vector (weight = summed width) — a true global walk, not a
-    merge of per-shard top-k lists. Same budget/exactness trade-off as
-    ``range_ops.range_topk_greedy``; O(budget·S·logσ) probes per query.
+    merge of per-shard top-k lists. Same budget/exactness/``prune``
+    trade-offs as ``range_ops.range_topk_greedy``; O(budget·S·logσ)
+    probes per query.
     """
     S = _num_shards(shards)
     wms = [_shard(shards, s) for s in range(S)]
@@ -150,7 +152,7 @@ def sharded_range_topk_greedy(shards: WaveletMatrix, shard_bits: int,
         los, his = local_ranges(shard_bits, S, n, lo_q, hi_q)
         return range_ops._topk_frontier(
             wms, [los[s] for s in range(S)], [his[s] for s in range(S)],
-            k, budget)[:2]
+            k, budget, prune)[:2]
 
     lo = jnp.asarray(lo, _I32)
     if lo.ndim == 0:
@@ -244,9 +246,10 @@ class ShardedAnalytics:
         return sharded_range_topk(self.shards, self.shard_bits, self.n,
                                   lo, hi, k)
 
-    def range_topk_greedy(self, lo, hi, k: int, budget: int | None = None):
+    def range_topk_greedy(self, lo, hi, k: int, budget: int | None = None,
+                          prune: bool = True):
         return sharded_range_topk_greedy(self.shards, self.shard_bits,
-                                         self.n, lo, hi, k, budget)
+                                         self.n, lo, hi, k, budget, prune)
 
     def range_distinct(self, lo, hi) -> jax.Array:
         return sharded_range_distinct(self.shards, self.shard_bits, self.n,

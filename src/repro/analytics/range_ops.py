@@ -167,7 +167,8 @@ def range_topk(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array, k: int):
 
 
 def range_topk_greedy(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array,
-                      k: int, budget: int | None = None):
+                      k: int, budget: int | None = None,
+                      prune: bool = True):
     """Greedy best-first top-k with a fixed pop budget. Same contract as
     ``range_topk``; cost O(budget) sequential pops of O(logσ) work,
     independent of σ.
@@ -180,13 +181,22 @@ def range_topk_greedy(wm: WaveletMatrix, lo: jax.Array, hi: jax.Array,
     the budget (guaranteed at ``budget ≥ 2^(nbits+1)``); the default
     ``topk_slot_budget`` heuristic is exact on skewed (Zipf-like)
     distributions and best-effort on near-uniform ones.
+
+    ``prune=True`` additionally tracks each frontier node's *lower* bound
+    ``ceil(weight / leaves_below)`` — some symbol under the node must
+    carry at least that count — and retires nodes whose upper bound
+    (weight) is beaten by the remaining-(k−found) largest lower bounds:
+    those nodes provably contain no answer, so the budget is spent on
+    contenders instead (tightens the near-uniform regime where sibling
+    weights are flat). Pruning never changes an exact result.
     """
     lo, hi = _clip_range(wm, lo, hi)
-    syms, counts, _ = _topk_frontier([wm], [lo], [hi], k, budget)
+    syms, counts, _ = _topk_frontier([wm], [lo], [hi], k, budget, prune)
     return syms, counts
 
 
-def _topk_frontier(wms, los, his, k: int, budget: int | None = None):
+def _topk_frontier(wms, los, his, k: int, budget: int | None = None,
+                   prune: bool = True):
     """Shared greedy top-k engine over a *list* of per-shard states.
 
     ``wms``: list of WaveletMatrix (identical nbits); slot intervals carry
@@ -284,6 +294,30 @@ def _topk_frontier(wms, los, his, k: int, budget: int | None = None):
 
         # the popped slot retires either way (unless we already stopped)
         alive = alive.at[best].set(jnp.where(stop, alive[best], False))
+
+        if prune:
+            # lower bound per node: ceil(weight / leaves below) — some
+            # symbol under it has at least that count. A node whose upper
+            # bound (weight) is strictly beaten by the (k - found)
+            # largest lower bounds of *other* nodes can never contribute
+            # an answer (frontier nodes are disjoint, so those bounds
+            # name distinct symbols) — retire it and spend the budget on
+            # contenders. The pruned node's own lb ≤ its weight < the
+            # threshold, so it never sits among the bounding set.
+            w_all = jnp.where(alive, jnp.sum(slot_hi - slot_lo, axis=1), 0)
+            leaves_below = jnp.left_shift(
+                jnp.asarray(1, _I32),
+                jnp.maximum(nbits - slot_level, 0))
+            lb = jnp.where(alive,
+                           -(-w_all // jnp.maximum(leaves_below, 1)), -1)
+            need = k - nout
+            kk = min(k, int(lb.shape[0]))            # tiny explicit budgets
+            kth = jax.lax.top_k(lb, kk)[0]           # descending
+            thresh = kth[jnp.clip(need - 1, 0, kk - 1)]
+            kill = (alive & (w_all < thresh) & (need > 0) & (need <= kk)
+                    & (~stop))
+            alive = alive & ~kill
+
         return (slot_lo, slot_hi, slot_sym, slot_level, alive, nslots,
                 out_syms, out_cnts, nout)
 

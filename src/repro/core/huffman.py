@@ -24,7 +24,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import bitops
-from .rank_select import BinaryRank, build_binary_rank
+from .rank_select import (BinaryRank, _rank1_at, _word_zero_one_prefixes,
+                          build_binary_rank, partition_select,
+                          partition_select_directory)
 from .scan import exclusive_sum, segmented_exclusive_sum
 from .sort import _invert_permutation
 
@@ -112,16 +114,87 @@ class HuffmanWaveletTree:
         return jnp.sum(self.active)
 
 
+def _huffman_level_plans(codes: np.ndarray, lengths: np.ndarray,
+                         max_len: int):
+    """Static per-level run tables for the fused (select-gather) build.
+
+    A level-l reorder moves each (l+1)-bit code prefix as one *run*:
+    prefix-freedom means a child prefix is either a complete codeword
+    (every element retires) or a proper prefix (every element survives),
+    so survivorship is a static property of the run. Runs are contiguous
+    symbol ranges in code order; their element counts come from the symbol
+    histogram at build time. Returns ``(sym_order, plans)`` with one dict
+    per level: symbol-range bounds ``a``/``b`` per run (dst order:
+    survivors ascending, then retirees ascending), the run's partition
+    ``bit``, the first symbol index ``pa`` of its parent's level-l
+    segment, and the survivor run count ``n_internal``.
+    """
+    codes = np.asarray(codes, np.uint64)
+    lengths = np.asarray(lengths, np.int64)
+    sigma = len(codes)
+    code_lj = codes << (np.uint64(max_len) - lengths.astype(np.uint64))
+    sym_order = np.argsort(code_lj, kind="stable")
+    lj_s = code_lj[sym_order]
+    len_s = lengths[sym_order]
+    plans = []
+    for l in range(max_len - 1):
+        act = len_s > l
+        pfx = lj_s >> np.uint64(max_len - l - 1)
+        runs = []                                   # (a, b, pfx, is_leaf)
+        i = 0
+        while i < sigma:
+            if not act[i]:
+                i += 1
+                continue
+            j = i
+            while j < sigma and act[j] and pfx[j] == pfx[i]:
+                j += 1
+            runs.append((i, j, int(pfx[i]), bool(len_s[i] == l + 1)))
+            i = j
+        first_of_parent = {}
+        for a, _, q, _ in runs:
+            first_of_parent.setdefault(q >> 1, a)   # runs are ascending
+        dst = [r for r in runs if not r[3]] + [r for r in runs if r[3]]
+        plans.append(dict(
+            a=np.array([r[0] for r in dst], np.int32),
+            b=np.array([r[1] for r in dst], np.int32),
+            bit=np.array([r[2] & 1 for r in dst], np.int32),
+            pa=np.array([first_of_parent[r[2] >> 1] for r in dst],
+                        np.int32),
+            n_internal=sum(1 for r in runs if not r[3]),
+            retired=(len_s <= l).astype(np.int32),
+        ))
+    return sym_order, plans
+
+
 def build_huffman_wavelet_tree(seq: jax.Array, codes: jax.Array,
                                lengths: jax.Array,
-                               max_len: int) -> HuffmanWaveletTree:
+                               max_len: int,
+                               fused: bool = True) -> HuffmanWaveletTree:
     """Theorem 4.3 construction, codewords given.
 
     Per level: survivors (code longer than l+1 bits) are stably reordered by
-    (segment, bit) via a compact-segment histogram + segmented prefix sums;
-    everyone else retires to the tail. Total data movement is
-    O(Σ_l active_l) = O(n · avg code length) on narrow arrays.
+    (segment, bit); everyone else retires to the tail. Total data movement
+    is O(Σ_l active_l) = O(n · avg code length) on narrow arrays.
+
+    ``fused=True`` (default) is the segmented select-gather fast path:
+    every (l+1)-prefix is one output run (survivors first, retirees behind
+    them — run membership and survivorship are *static* codebook facts, so
+    the per-level histogram over 2n+1 keys and the n-element
+    inverse-permutation scatter both disappear). The element landing at
+    run offset q is ``select_bit(rank_bit(parent segment start) + q)`` on
+    the level bitmap — the same word-granularity select directory as
+    ``rank_select.segmented_partition_gather``, with run offsets coming
+    from one symbol histogram. Requires concrete (non-traced) codewords;
+    traced codebooks fall back to the scatter path. Level bitmaps, rank
+    directories and active counts are bit-identical on both paths (only
+    the internal order of the retired tail — which never contributes
+    another bit — differs).
     """
+    concrete = not (isinstance(codes, jax.core.Tracer)
+                    or isinstance(lengths, jax.core.Tracer))
+    if fused and concrete and max_len > 1:
+        return _build_huffman_fused(seq, codes, lengths, max_len)
     n = int(seq.shape[0])
     sidx = seq.astype(_I32)
     elen = lengths.astype(_I32)[sidx]                       # (n,)
@@ -168,6 +241,68 @@ def build_huffman_wavelet_tree(seq: jax.Array, codes: jax.Array,
     ranks = [build_binary_rank(w, n) for w in level_words]
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ranks)
     return HuffmanWaveletTree(ranks=stacked, active=jnp.stack(active_counts),
+                              n=n, max_len=max_len)
+
+
+def _build_huffman_fused(seq: jax.Array, codes: jax.Array,
+                         lengths: jax.Array,
+                         max_len: int) -> HuffmanWaveletTree:
+    """Select-gather realization of the Theorem 4.3 build (see
+    :func:`build_huffman_wavelet_tree`)."""
+    n = int(seq.shape[0])
+    sigma = int(np.asarray(lengths).shape[0])
+    sym_order, plans = _huffman_level_plans(np.asarray(codes),
+                                            np.asarray(lengths), max_len)
+    sidx = seq.astype(_I32)
+    elen = lengths.astype(_I32)[sidx]                       # (n,)
+    cw = (codes.astype(_U32)[sidx]
+          << (jnp.uint32(max_len) - elen.astype(_U32)))     # left-justified
+    # one symbol histogram (code order) feeds every level's run offsets
+    hist = jnp.zeros((sigma,), _I32).at[sidx].add(1, mode="drop")
+    hist_s = hist[jnp.asarray(sym_order)]
+    H = jnp.concatenate([jnp.zeros((1,), _I32), jnp.cumsum(hist_s)])
+    p_out = jnp.arange(n, dtype=_I32)
+    level_words: List[jax.Array] = []
+    active_counts: List[jax.Array] = []
+
+    for l in range(max_len):
+        act = elen > l
+        bit = jnp.where(act, (cw >> _U32(max_len - 1 - l)) & _U32(1),
+                        _U32(0)).astype(_I32)
+        words = bitops.pack_bits(bitops.pad_bits(bit.astype(jnp.uint8)))
+        level_words.append(words)
+        active_counts.append(jnp.sum(act, dtype=_I32))
+        if l == max_len - 1:
+            break
+
+        # ---- reorder for level l+1 (all gathers) ---------------------
+        pl = plans[l]
+        ret = jnp.concatenate([jnp.zeros((1,), _I32),
+                               jnp.cumsum(hist_s * jnp.asarray(pl["retired"]))])
+        a_l = H[sigma] - ret[sigma]                  # active element count
+        cnt = H[jnp.asarray(pl["b"])] - H[jnp.asarray(pl["a"])]
+        dst_start = jnp.cumsum(cnt) - cnt
+        pa = jnp.asarray(pl["pa"])
+        ps = H[pa] - ret[pa]                         # parent segment start
+        directory = partition_select_directory(words, n)
+        _, ocum, _, _ = directory
+        total_ones = jnp.asarray(n, _I32) - directory[2]
+        ones_at = _rank1_at(words, ocum, total_ones, ps, n)
+        run_bit = jnp.asarray(pl["bit"])
+        base = jnp.where(run_bit == 1, ones_at, ps - ones_at)
+        # run of every output position (run starts ascending in dst order)
+        nr = pl["a"].shape[0]
+        rmarks = jnp.zeros((n,), _I32).at[dst_start].max(
+            jnp.arange(nr, dtype=_I32), mode="drop")
+        r = jax.lax.cummax(rmarks)
+        t = base[r] + (p_out - dst_start[r])
+        src = partition_select(words, directory, run_bit[r], t)
+        g = jnp.where(p_out < a_l, src, p_out)       # old tail stays put
+        cw, elen = cw[g], elen[g]
+
+    ranks = jax.vmap(lambda w: build_binary_rank(w, n))(
+        jnp.stack(level_words))
+    return HuffmanWaveletTree(ranks=ranks, active=jnp.stack(active_counts),
                               n=n, max_len=max_len)
 
 

@@ -20,9 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from .rank_select import (GeneralizedRankSelect, build_generalized,
+                          build_generalized_from_counts, field_node_counts,
                           generalized_access, generalized_rank,
-                          generalized_select)
-from .scan import exclusive_sum, segmented_exclusive_sum
+                          generalized_select, packed_field_counts,
+                          segmented_partition_gather_fields)
+from .scan import (exclusive_sum, segment_ids_from_starts,
+                   segmented_exclusive_sum)
 from .sort import _invert_permutation
 
 _I32 = jnp.int32
@@ -69,18 +72,33 @@ def _node_starts_multiary(seq: jax.Array, width: int,
 
 
 def build_multiary_wavelet_tree(seq: jax.Array, sigma: int, width: int = 2,
-                                chunk_syms: int = 128
-                                ) -> MultiaryWaveletTree:
+                                chunk_syms: int = 128,
+                                fused: bool = True) -> MultiaryWaveletTree:
     """Theorem 4.4 construction for degree d = 2^width.
 
     Symbols are treated as (nlevels·width)-bit numbers (zero-extended at the
     top, as in the paper's full-binary-tree embedding where only every
     (β·log d)-th binary level keeps a sequence).
+
+    ``fused=True`` (default) collapses the d-way node-segmented split —
+    one (node, digit) histogram scatter + d segmented prefix sums + an
+    n-element inverse-permutation scatter — into one histogram-offset
+    select-gather (``rank_select.segmented_partition_gather_fields``).
+    The shared per-(word, digit) directory additionally replaces the two
+    remaining n-element histogram scatters of the build: the generalized
+    rank/select chunk tables are reshape-sums over it
+    (``build_generalized_from_counts``), and the ``node_starts`` rows
+    chain level to level through the gather's own per-node digit counts
+    (a (node, digit) pair at level l IS a node at level l+1) instead of a
+    full-symbol histogram. ``fused=False`` keeps the scatter baseline;
+    outputs are bit-identical.
     """
     n = int(seq.shape[0])
     nbits = max(1, math.ceil(math.log2(max(2, sigma))))
     nlevels = (nbits + width - 1) // width
     total_bits = width * nlevels
+    if fused:
+        return _build_multiary_fused(seq, width, nlevels, n, chunk_syms)
     node_starts = _node_starts_multiary(seq, width, nlevels)
     order = seq.astype(_U32)
     level_seqs: List[jax.Array] = []
@@ -91,10 +109,10 @@ def build_multiary_wavelet_tree(seq: jax.Array, sigma: int, width: int = 2,
         level_seqs.append(digit)
         if l == nlevels - 1:
             break
-        # d-way node-segmented stable split
+        d = 1 << width
+        # d-way node-segmented stable split (scatter baseline)
         nid = (order >> _U32(total_bits - l * width)).astype(_I32) if l else \
             jnp.zeros((n,), _I32)
-        d = 1 << width
         key = nid * d + digit
         hist = jnp.zeros(((1 << (l + 1) * width),), _I32).at[key].add(
             1, mode="drop")
@@ -109,6 +127,43 @@ def build_multiary_wavelet_tree(seq: jax.Array, sigma: int, width: int = 2,
         order = order[_invert_permutation(dest)]
 
     grs = [build_generalized(s, width, n, chunk_syms) for s in level_seqs]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grs)
+    return MultiaryWaveletTree(levels=stacked, node_starts=node_starts,
+                               n=n, width=width, nlevels=nlevels)
+
+
+def _build_multiary_fused(seq: jax.Array, width: int, nlevels: int, n: int,
+                          chunk_syms: int) -> MultiaryWaveletTree:
+    """Scatter-free realization of the Theorem 4.4 build (see
+    :func:`build_multiary_wavelet_tree`)."""
+    total_bits = width * nlevels
+    size = 1 << total_bits
+    order = seq.astype(_U32)
+    starts = jnp.zeros((1,), _I32)               # level-0 node offsets
+    start_rows: List[jax.Array] = []
+    grs: List[GeneralizedRankSelect] = []
+
+    for l in range(nlevels):
+        digit = ((order >> _U32(total_bits - (l + 1) * width))
+                 & _U32((1 << width) - 1)).astype(_I32)
+        plan = packed_field_counts(digit, width, n)
+        grs.append(build_generalized_from_counts(*plan, width=width, n=n,
+                                                 chunk_syms=chunk_syms))
+        _, cnt_node = field_node_counts(*plan, width=width,
+                                        node_start=starts, n=n)
+        start_rows.append(starts)
+        if l < nlevels - 1:
+            nid = segment_ids_from_starts(starts, n) if l else \
+                jnp.zeros((n,), _I32)
+            g = segmented_partition_gather_fields(digit, width, nid,
+                                                  starts, n, plan=plan)
+            order = order[g]
+        starts = exclusive_sum(cnt_node.reshape(-1))
+    start_rows.append(starts)                    # leaf/symbol offsets
+
+    rows = [jnp.concatenate([r, jnp.zeros((size - r.shape[0],), _I32)])
+            if r.shape[0] < size else r for r in start_rows]
+    node_starts = jnp.stack(rows)
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grs)
     return MultiaryWaveletTree(levels=stacked, node_starts=node_starts,
                                n=n, width=width, nlevels=nlevels)

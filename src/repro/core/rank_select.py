@@ -328,6 +328,47 @@ def build_bitvector_levels(words: jax.Array, n: int,
     return BitVector(rank=rank, sel1=sel1, sel0=sel0)
 
 
+def partition_select_directory(words: jax.Array, n: int):
+    """Word-granularity select directory over a packed n-bit flag bitmap.
+
+    Returns ``(zcum, ocum, Z, cm)``: per-word exclusive zero/one counts,
+    the total zero count, and the run-start cummax ``cm`` over the
+    combined [zero targets | one targets] space — word w's zero run starts
+    at ``zcum[w]`` with mark w, its one run at ``Z + ocum[w]`` with mark
+    ``W + w``; a running max assigns every target the word that feeds it
+    (empty runs are superseded by the next run sharing their start). This
+    is the Theorem 5.1 structure every partition-by-select gather here is
+    built from: per-word popcounts + two prefix sums + an O(n/log n)-index
+    scatter + one cummax.
+    """
+    W = words.shape[0]
+    zcum, ocum, total_ones = _word_zero_one_prefixes(words, n)
+    Z = jnp.asarray(n, _I32) - total_ones
+    wid = jnp.arange(W, dtype=_I32)
+    marks = jnp.zeros((n,), _I32)
+    marks = marks.at[zcum].max(wid, mode="drop")
+    marks = marks.at[Z + ocum].max(W + wid, mode="drop")
+    return zcum, ocum, Z, jax.lax.cummax(marks)
+
+
+def partition_select(words: jax.Array, directory, bit: jax.Array,
+                     t: jax.Array) -> jax.Array:
+    """Source index of the t-th ``bit``-valued flag, via the directory.
+
+    ``bit``/``t`` are (n,) arrays (one select per output position); the
+    zero half selects in the complemented word — padding bits sit past
+    every valid zero, so the in-word rank always lands on a real bit.
+    """
+    zcum, ocum, Z, cm = directory
+    W = words.shape[0]
+    m = cm[jnp.where(bit == 1, Z + t, t)]
+    w = jnp.where(bit == 1, m - W, m)
+    r = t - jnp.where(bit == 1, ocum[w], zcum[w])             # rank in word
+    word = words[w]
+    wsel = jnp.where(bit == 1, word, ~word)
+    return w * bitops.WORD_BITS + bitops.select_in_word(wsel, r)
+
+
 def stable_partition_gather(words: jax.Array, total_zeros: jax.Array,
                             n: int) -> jax.Array:
     """Gather permutation of the stable 0/1 partition, via select (no sort,
@@ -341,40 +382,267 @@ def stable_partition_gather(words: jax.Array, total_zeros: jax.Array,
 
     This is the construction-side payoff of the paper's Section 5 select
     structures: position p takes element ``select0(p)`` (or
-    ``select1(p - Z)``), so the whole permutation is one word-granularity
-    select directory — per-word popcounts + two prefix sums (O(n/log n)
-    work, Theorem 5.1), run starts scattered at *word* granularity
-    (O(n/log n) indices), a running max to assign each position its word,
-    and a branchless in-word select. Everything past the tiny run-start
-    scatter is vectorized gathers/arithmetic, which is why this formulation
-    beats the scatter-based inverse permutation on CPU/TPU backends where
-    n-element scatters serialize.
+    ``select1(p - Z)``), so the whole permutation is one
+    :func:`partition_select_directory` — everything past its tiny
+    run-start scatter is vectorized gathers/arithmetic, which is why this
+    formulation beats the scatter-based inverse permutation on CPU/TPU
+    backends where n-element scatters serialize.
+    """
+    del total_zeros                      # derivable; kept for API stability
+    directory = partition_select_directory(words, n)
+    Z = directory[2]
+    p = jnp.arange(n, dtype=_I32)
+    is_one = (p >= Z).astype(_I32)
+    t = jnp.where(is_one == 1, p - Z, p)
+    return partition_select(words, directory, is_one, t)
+
+
+def _word_zero_one_prefixes(words: jax.Array, n: int):
+    """Per-word exclusive zero/one counts of an n-bit packed bitmap.
+
+    Returns ``(zcum, ocum, total_ones)`` — the word-granularity select
+    directory every partition-by-select gather is built from. Padding bits
+    past n must be 0 (they are excluded from the zero counts).
     """
     W = words.shape[0]
-    pc = bitops.popcount(words).astype(_I32)                  # ones per word
+    pc = bitops.popcount(words).astype(_I32)
     valid = jnp.clip(n - jnp.arange(W, dtype=_I32) * bitops.WORD_BITS,
                      0, bitops.WORD_BITS)
-    zc = valid - pc                                           # zeros (no pad)
-    zcum = jnp.cumsum(zc) - zc                                # exclusive
+    zc = valid - pc
+    zcum = jnp.cumsum(zc) - zc
     ocum = jnp.cumsum(pc) - pc
-    Z = jnp.asarray(total_zeros, _I32)
-    # Mark the output start of every word's zero-run and one-run, then a
-    # running max assigns each output position the word that feeds it
-    # (empty runs are superseded by the next run sharing their start).
-    wid = jnp.arange(W, dtype=_I32)
-    marks = jnp.zeros((n,), _I32)
-    marks = marks.at[zcum].max(wid, mode="drop")
-    marks = marks.at[Z + ocum].max(W + wid, mode="drop")
-    cm = jax.lax.cummax(marks)
+    return zcum, ocum, ocum[-1] + pc[-1]
+
+
+def _rank1_at(words: jax.Array, ocum: jax.Array, total_ones: jax.Array,
+              pos: jax.Array, n: int) -> jax.Array:
+    """rank1 at positions ``pos`` (each in [0, n]) from the word directory.
+
+    One word gather + one masked popcount per query — used for the
+    O(#nodes) boundary ranks of the segmented partition gathers.
+    """
+    W = words.shape[0]
+    w = pos // bitops.WORD_BITS
+    off = (pos % bitops.WORD_BITS).astype(_U32)
+    wc = jnp.minimum(w, W - 1)
+    part = (ocum[wc]
+            + bitops.popcount(words[wc] & bitops.mask_below(off)).astype(_I32))
+    # pos == n with n a word multiple walks past the last word: total ones
+    return jnp.where(w >= W, total_ones, part)
+
+
+def segmented_partition_gather(words: jax.Array, nid: jax.Array,
+                               node_start: jax.Array, n: int) -> jax.Array:
+    """Gather permutation of the stable *per-node* 0/1 partition.
+
+    ``words``: packed n-bit partition-flag bitmap (padding past n must be
+    0); ``nid``: (n,) int32 node id of each element (elements already
+    grouped by node, ids non-decreasing); ``node_start``: (V,) int32 start
+    offset of every node (= count of elements in smaller nodes; empty
+    nodes repeat the next start). Returns ``g`` (n,) int32 with ``g[p]`` =
+    source index of the element landing at p — ``x[g]`` reorders every
+    node's segment to [zeros | ones], both stably.
+
+    The segmented generalization of :func:`stable_partition_gather`
+    (paper Theorem 5.1 select machinery driving the Theorem 4.1/4.2
+    node-segmented splits): a per-node partition never crosses node
+    boundaries, so position p still belongs to node ``nid[p]``, and the
+    element landing there is ``select0(rank0(node_start) + local offset)``
+    (resp. select1) on the *global* bitmap. One word-granularity select
+    directory — per-word popcounts, two prefix sums, run-start marks at
+    word granularity (O(n/log n) scatter indices), a running max, and a
+    branchless in-word select — therefore serves all ``V·2`` runs at once;
+    only the O(V) boundary ranks are segmented state. Replaces the
+    histogram + segmented-scan + n-element-scatter inverse permutation
+    that serializes on CPU/XLA backends.
+    """
+    # global select directory: word run starts in the [zeros | ones] target
+    # space (exactly the unsegmented structure — targets are global ranks)
+    directory = partition_select_directory(words, n)
+    zcum, ocum, Z, _ = directory
+    total_ones = jnp.asarray(n, _I32) - Z
+    # per-node boundary ranks (O(V) gathers)
+    ns = node_start.astype(_I32)
+    ones_at = _rank1_at(words, ocum, total_ones, ns, n)
+    zeros_at = ns - ones_at                                # rank0(node start)
+    znode = jnp.concatenate([zeros_at[1:], Z[None]]) - zeros_at
+    # per-position: local offset -> global select target
     p = jnp.arange(n, dtype=_I32)
-    is_one = p >= Z
-    w = jnp.where(is_one, cm - W, cm)
-    r = jnp.where(is_one, p - Z - ocum[w], p - zcum[w])       # rank in word
-    word = words[w]
-    # zeros half selects in the complemented word; padding bits sit past
-    # every valid zero, so r always lands on a real bit
-    wsel = jnp.where(is_one, word, ~word)
-    return w * bitops.WORD_BITS + bitops.select_in_word(wsel, r)
+    v = nid.astype(_I32)
+    offp = p - ns[v]
+    is_one = (offp >= znode[v]).astype(_I32)
+    t = jnp.where(is_one == 1, (ns[v] - zeros_at[v]) + offp - znode[v],
+                  zeros_at[v] + offp)
+    return partition_select(words, directory, is_one, t)
+
+
+_FIELDS_SUPERWORD = 16      # words per run-start mark in the d-way select
+
+
+def _field_start_mult(width: int) -> jnp.ndarray:
+    """uint32 with a 1 at the start bit of every ``width``-bit field."""
+    return _U32(sum(1 << (j * width) for j in range(32 // width)))
+
+
+def _field_eq_mask(words: jax.Array, dv: jax.Array, width: int) -> jax.Array:
+    """SWAR equality mask: bit ``j*width`` set iff field j == dv.
+
+    The packed-list analogue of the paper's count-symbol-in-word LUT:
+    XOR with the broadcast symbol, OR-fold each field onto its start bit,
+    invert — O(width) vector ops, no per-field loop.
+    """
+    mult = _field_start_mult(width)
+    x = words ^ (jnp.asarray(dv).astype(_U32) * mult)
+    y = x
+    for s in range(1, width):
+        y = y | (x >> _U32(s))
+    return ~y & mult
+
+
+def packed_field_counts(digits: jax.Array, width: int, n: int):
+    """(packed words, per-(word, digit) counts) for a digit sequence.
+
+    ``cntwd[w, v]`` counts fields equal to v in word w, padding excluded —
+    the word-granularity directory the d-way select gather, the
+    generalized rank/select build, and the multiary node-offset chain all
+    share (one packing + d popcount passes serves all three).
+    """
+    d = 1 << width
+    per = 32 // width
+    packed = bitops.pack_fields(digits, width)
+    Wf = packed.shape[0]
+    vf = jnp.clip(n - jnp.arange(Wf, dtype=_I32) * per, 0, per)
+    vmask = bitops.mask_below((vf * width).astype(_U32))
+    cntwd = jnp.stack(
+        [bitops.popcount(_field_eq_mask(packed, jnp.asarray(dv), width)
+                         & vmask).astype(_I32) for dv in range(d)],
+        axis=1)                                            # (Wf, d)
+    return packed, cntwd
+
+
+def field_node_counts(packed: jax.Array, cntwd: jax.Array, width: int,
+                      node_start: jax.Array, n: int):
+    """Per-node digit boundary ranks: ``rank_at[v, dv]`` = # of dv-digits
+    before node v's start; ``cnt_node[v, dv]`` = # inside node v.
+
+    O(V·d) work from the shared word directory. ``cnt_node`` doubles as
+    the next level's node-size table (a (node, digit) pair at level l IS
+    a node at level l+1), which is how the fused multiary build chains
+    its ``node_starts`` rows without any n-element histogram.
+    """
+    d = 1 << width
+    per = 32 // width
+    Wf = packed.shape[0]
+    vcum = jnp.cumsum(cntwd, axis=0) - cntwd
+    totals = vcum[-1] + cntwd[-1]
+    ns = node_start.astype(_I32)
+    w0 = jnp.minimum(ns // per, Wf - 1)
+    off0 = (ns % per).astype(_U32) * _U32(width)
+    words0 = packed[w0]
+    before = jnp.stack(
+        [bitops.popcount(_field_eq_mask(words0, jnp.asarray(dv), width)
+                         & bitops.mask_below(off0)).astype(_I32)
+         for dv in range(d)], axis=1)                      # (V, d)
+    rank_at = jnp.where((ns // per >= Wf)[:, None], totals[None, :],
+                        vcum[w0] + before)
+    cnt_node = jnp.concatenate([rank_at[1:], totals[None, :]]) - rank_at
+    return rank_at, cnt_node
+
+
+def segmented_partition_gather_fields(digits: jax.Array, width: int,
+                                      nid: jax.Array, node_start: jax.Array,
+                                      n: int,
+                                      plan=None) -> jax.Array:
+    """Gather permutation of the stable per-node *d-way* partition
+    (d = 2^width): every node's segment reorders to [digit-0 run | … |
+    digit-(d−1) run], each run stable.
+
+    The d-ary generalization of :func:`segmented_partition_gather` for
+    the multiary trees (paper Theorem 4.4): d per-word SWAR field
+    histograms replace the popcount pair and d prefix-sum columns replace
+    zcum/ocum. Run-start marks live in a single length-n digit-major
+    target space at *superword* granularity (full word granularity would
+    scatter d·Wf = n·d/per indices — more marks than elements for d >
+    per — while superwords keep the scatter at d·Wf/16 sorted indices);
+    a ≤4-step branchless binary refine inside the superword finds the
+    exact word, then a SWAR equality mask + in-word select finds the
+    field. The d segmented prefix sums + (node, digit) histogram +
+    n-element scatter of the baseline collapse into this one
+    histogram-offset gather. ``plan`` optionally reuses
+    ``packed_field_counts`` output shared with the directory builds.
+    """
+    d = 1 << width
+    per = 32 // width
+    packed, cntwd = plan if plan is not None else \
+        packed_field_counts(digits, width, n)
+    Wf = packed.shape[0]
+    vcum = jnp.cumsum(cntwd, axis=0) - cntwd               # (Wf, d) excl.
+    vflat = vcum.reshape(-1)
+    totals = vcum[-1] + cntwd[-1]                          # (d,)
+    dbase = jnp.cumsum(totals) - totals                    # (d,) excl.
+    rank_at, cnt_node = field_node_counts(packed, cntwd, width,
+                                          node_start, n)
+    ndp = jnp.cumsum(cnt_node, axis=1) - cnt_node          # (V, d) excl.
+    # per-position: node-local offset -> digit run -> global select target
+    ns = node_start.astype(_I32)
+    p = jnp.arange(n, dtype=_I32)
+    v = nid.astype(_I32)
+    offp = p - ns[v]
+    dv = jnp.sum((offp[:, None] >= ndp[v]).astype(_I32), axis=1) - 1
+    t = rank_at[v, dv] + offp - ndp[v, dv]
+    # superword run-start marks in the digit-major target space
+    S = _FIELDS_SUPERWORD
+    wsup = (Wf + S - 1) // S
+    vsup = vcum[::S]                                       # (wsup, d)
+    sidx = jnp.arange(wsup, dtype=_I32)
+    dvals = jnp.arange(d, dtype=_I32)
+    marks = jnp.zeros((n,), _I32).at[
+        (dbase[:, None] + vsup.T).reshape(-1)].max(
+        (dvals[:, None] * wsup + sidx[None, :]).reshape(-1), mode="drop")
+    cm = jax.lax.cummax(marks)
+    ws = cm[dbase[dv] + t] - dv * wsup
+    # refine: rightmost word in the superword with vcum[w, dv] <= t (ties
+    # left of it are empty words)
+    lo = ws * S
+    hi = jnp.minimum(lo + (S - 1), Wf - 1)
+    for _ in range(max(1, math.ceil(math.log2(S)))):
+        mid = (lo + hi + 1) // 2
+        go = vflat[mid * d + dv] <= t
+        lo = jnp.where(go, mid, lo)
+        hi = jnp.where(go, hi, mid - 1)
+    w = lo
+    r = t - vflat[w * d + dv]
+    # r-th field equal to dv inside word w: SWAR mask + in-word select
+    eqb = _field_eq_mask(packed[w], dv, width)
+    return w * per + bitops.select_in_word(eqb, r) // width
+
+
+def build_generalized_from_counts(packed: jax.Array, cntwd: jax.Array,
+                                  width: int, n: int,
+                                  chunk_syms: int = 128
+                                  ) -> GeneralizedRankSelect:
+    """``build_generalized`` from the shared word directory — the chunk
+    histogram is a reshape-sum over ``cntwd`` instead of an n-element
+    scatter. Bit-identical to :func:`build_generalized` on the same
+    sequence.
+    """
+    per = 32 // width
+    sigma = 1 << width
+    assert chunk_syms % per == 0
+    wpc = chunk_syms // per
+    num_chunks = (n + chunk_syms - 1) // chunk_syms
+    want_words = num_chunks * wpc
+    if packed.shape[0] < want_words:
+        packed = jnp.concatenate(
+            [packed, jnp.zeros((want_words - packed.shape[0],), _U32)])
+        cntwd = jnp.concatenate(
+            [cntwd, jnp.zeros((want_words - cntwd.shape[0], sigma), _I32)])
+    hist = jnp.sum(cntwd[:want_words].reshape(num_chunks, wpc, sigma),
+                   axis=1)
+    cum = jnp.concatenate([jnp.zeros((1, sigma), _I32),
+                           jnp.cumsum(hist, axis=0)], axis=0)
+    return GeneralizedRankSelect(packed=packed[:want_words], chunk_cum=cum,
+                                 n=n, width=width, chunk_syms=chunk_syms)
 
 
 def bitvector_bits(bv: BitVector) -> int:

@@ -59,6 +59,21 @@ def segmented_exclusive_sum(x: jax.Array, segment_starts: jax.Array) -> jax.Arra
     return incl - x.astype(jnp.int32)
 
 
+def segment_ids_from_starts(starts: jax.Array, n: int) -> jax.Array:
+    """Segment id of every position given sorted segment start offsets.
+
+    ``starts`` (S,) int32, non-decreasing, ``starts[0] == 0``; position p
+    belongs to the largest segment s with ``starts[s] <= p``. Realized as a
+    run-start mark scatter (S indices, O(S) work) + a running max — the
+    gather-friendly inverse of ``jnp.searchsorted`` that every segmented
+    fast path here uses (empty segments share a start and are superseded
+    by the mark max, so they correctly own no positions).
+    """
+    sid = jnp.arange(starts.shape[0], dtype=jnp.int32)
+    marks = jnp.zeros((n,), jnp.int32).at[starts].max(sid, mode="drop")
+    return jax.lax.cummax(marks)
+
+
 def stable_partition_indices(flags: jax.Array) -> jax.Array:
     """Destination index of each element under a stable 0/1 partition.
 

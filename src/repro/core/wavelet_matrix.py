@@ -63,6 +63,18 @@ def reverse_bits(x: jax.Array, width: int) -> jax.Array:
     return out
 
 
+def default_use_kernels(seq: jax.Array) -> bool:
+    """Default Pallas-kernel routing for the fused builders: auto on TPU,
+    mechanically off when the builder sees a batching tracer (the fused
+    level kernels carry cross-grid scratch, so they must not be vmapped).
+    The guard cannot see through ``vmap``-of-``jit`` composition — callers
+    wrapping a *jitted* builder in ``vmap`` on TPU must pass
+    ``use_kernels=False`` themselves."""
+    from jax.interpreters import batching
+    return (jax.default_backend() == "tpu"
+            and not isinstance(seq, batching.BatchTracer))
+
+
 @jax.tree_util.register_dataclass
 @dataclass(frozen=True)
 class WaveletMatrix:
@@ -116,9 +128,7 @@ def build_wavelet_matrix(seq: jax.Array, sigma: int, tau: int = 8,
     settings (and to ``build_wavelet_matrix_levelwise``).
     """
     if use_kernels is None:
-        from jax.interpreters import batching
-        use_kernels = (jax.default_backend() == "tpu"
-                       and not isinstance(seq, batching.BatchTracer))
+        use_kernels = default_use_kernels(seq)
     if not fused:
         return _build_wavelet_matrix_steps(seq, sigma, tau, big_step,
                                            sample_rate)

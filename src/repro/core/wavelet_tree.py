@@ -29,11 +29,13 @@ import jax
 import jax.numpy as jnp
 
 from . import bitops
-from .rank_select import (BitVector, access_bit, build_bitvector, rank0,
-                          rank1, select0, select1)
-from .scan import exclusive_sum, segmented_exclusive_sum
-from .sort import _invert_permutation, counting_rank
-from .wavelet_matrix import num_levels
+from .rank_select import (BitVector, access_bit, build_bitvector,
+                          build_bitvector_levels, rank0, rank1,
+                          segmented_partition_gather, select0, select1)
+from .scan import (apply_permutation_dest, exclusive_sum,
+                   segment_ids_from_starts, segmented_exclusive_sum)
+from .sort import _invert_permutation, counting_rank, sort_pass
+from .wavelet_matrix import default_use_kernels, num_levels
 
 _U32 = jnp.uint32
 _I32 = jnp.int32
@@ -85,6 +87,29 @@ def _finalize(level_words: List[jax.Array], node_starts: jax.Array,
                        n=n, nbits=nbits)
 
 
+def _finalize_fused(level_words: List[jax.Array], node_starts: jax.Array,
+                    n: int, nbits: int, sample_rate: int,
+                    use_kernels: bool = False) -> WaveletTree:
+    """All nbits rank/select directories in one batched launch group —
+    bit-identical to :func:`_finalize` (see build_bitvector_levels)."""
+    stacked = build_bitvector_levels(jnp.stack(level_words), n, sample_rate,
+                                     use_kernels=use_kernels)
+    return WaveletTree(bitvectors=stacked, node_starts=node_starts,
+                       n=n, nbits=nbits)
+
+
+def _level_nid(node_starts: jax.Array, l: int, n: int) -> jax.Array:
+    """Node id of every position at level l, from the offset table alone.
+
+    After the level-(l−1) split the sequence is sorted by its top l bits,
+    so membership is determined by the precomputed ``node_starts`` row —
+    no per-element state needs to ride along the partitions.
+    """
+    if l == 0:
+        return jnp.zeros((n,), _I32)
+    return segment_ids_from_starts(node_starts[l][:1 << l], n)
+
+
 def _pack_level(bit: jax.Array) -> jax.Array:
     return bitops.pack_bits(bitops.pad_bits(bit.astype(jnp.uint8)))
 
@@ -113,8 +138,116 @@ def _segmented_partition_dest(nid: jax.Array, bit: jax.Array,
 
 def build_wavelet_tree(seq: jax.Array, sigma: int, tau: int = 8,
                        big_step: str = "compose",
-                       sample_rate: int = 512) -> WaveletTree:
-    """τ-chunked sort-based construction (paper Theorem 4.1)."""
+                       sample_rate: int = 512,
+                       fused: bool = True,
+                       use_kernels: bool | None = None) -> WaveletTree:
+    """τ-chunked sort-based construction (paper Theorem 4.1).
+
+    ``fused=True`` (default) is the segmented select-gather fast path:
+    each node-segmented stable partition is applied as a *gather* whose
+    permutation comes from one word-granularity select directory
+    (``rank_select.segmented_partition_gather``), node membership is
+    re-derived per level from the precomputed ``node_starts`` table
+    (a run-start mark + running max instead of a carried nid array), the
+    composed permutation only materializes when a compose big step will
+    consume it, and all nbits rank/select directories build in one
+    batched launch group. ``fused=False`` keeps the historical scatter
+    path (histogram + segmented scans + n-element inverse-permutation
+    scatters) as the benchmark baseline. Outputs are bit-identical.
+
+    ``use_kernels`` routes shallow levels (2^(l+1) key buckets within the
+    ``kernels.wt_level`` VMEM bound) through the fused Pallas segmented
+    level step and the directory builds through ``kernels.rank_build``;
+    ``None`` auto-enables on TPU with the same BatchTracer guard as
+    ``build_wavelet_matrix``.
+    """
+    if use_kernels is None:
+        use_kernels = default_use_kernels(seq)
+    if not fused:
+        return _build_wavelet_tree_steps(seq, sigma, tau, big_step,
+                                         sample_rate)
+
+    n = int(seq.shape[0])
+    nbits = num_levels(sigma)
+    node_starts = _node_starts_from_symbols(seq, nbits)
+    order = seq.astype(_U32)
+    level_words: List[jax.Array] = []
+
+    for alpha0 in range(0, nbits, tau):
+        width = min(tau, nbits - alpha0)
+        fld = bitops.extract_field(order, jnp.uint32(nbits - alpha0 - width),
+                                   width)
+        sub = fld
+        last_chunk = alpha0 + width >= nbits
+        need_idx = (not last_chunk) and big_step == "compose"
+        idx = jnp.arange(n, dtype=_I32) if need_idx else None
+        for t in range(width):
+            l = alpha0 + t
+            shift = width - 1 - t
+            last_level = l == nbits - 1
+            # Movement only arranges the *next* level; at the chunk's last
+            # level only a compose big step still consumes the permutation
+            # (radix/xla re-sort from the chunk-start order).
+            move = (not last_level) and (t < width - 1 or need_idx)
+            words = None
+            if move:
+                nid = _level_nid(node_starts, l, n)
+                if use_kernels and _wt_kernel_fits(l):
+                    from repro.kernels import ops as _kops
+                    dest, words = _kops.wt_level_step_fused(
+                        sub, nid, shift, 1 << (l + 1), n)
+                    if t < width - 1:
+                        sub = apply_permutation_dest(sub, dest)
+                    if need_idx:
+                        idx = apply_permutation_dest(idx, dest)
+                else:
+                    bit = ((sub >> _U32(shift)) & _U32(1)).astype(_I32)
+                    words = _pack_level(bit)
+                    g = segmented_partition_gather(
+                        words, nid, node_starts[l][:1 << l], n)
+                    if t < width - 1:
+                        sub = sub[g]
+                    if need_idx:
+                        idx = idx[g]
+            if words is None:
+                bit = ((sub >> _U32(shift)) & _U32(1)).astype(_I32)
+                words = _pack_level(bit)
+            level_words.append(words)
+        if not last_chunk:
+            if big_step == "compose":
+                order = order[idx]
+            else:
+                order = _tree_big_step(order, nbits, alpha0 + width,
+                                       big_step)
+
+    return _finalize_fused(level_words, node_starts, n, nbits, sample_rate,
+                           use_kernels=use_kernels)
+
+
+def _wt_kernel_fits(l: int) -> bool:
+    from repro.kernels import wt_level as _wtk
+    return (1 << (l + 1)) <= _wtk.MAX_KEYS
+
+
+def _tree_big_step(order: jax.Array, nbits: int, consumed: int,
+                   big_step: str) -> jax.Array:
+    """One stable counting/XLA sort keyed on the top ``consumed`` bits —
+    globally a sort by (node, next τ bits)."""
+    key = (order >> _U32(nbits - consumed)).astype(_I32)
+    if big_step == "radix":
+        order, _ = sort_pass(order, key, 1 << consumed, backend="counting")
+        return order
+    if big_step == "xla":
+        _, order = jax.lax.sort((key, order), num_keys=1, is_stable=True)
+        return order
+    raise ValueError(f"unknown big_step {big_step!r}")
+
+
+def _build_wavelet_tree_steps(seq: jax.Array, sigma: int, tau: int = 8,
+                              big_step: str = "compose",
+                              sample_rate: int = 512) -> WaveletTree:
+    """Historical step-by-step scatter realization of Theorem 4.1
+    (benchmark baseline for the fused fast path)."""
     n = int(seq.shape[0])
     nbits = num_levels(sigma)
     node_starts = _node_starts_from_symbols(seq, nbits)
@@ -159,8 +292,14 @@ def build_wavelet_tree(seq: jax.Array, sigma: int, tau: int = 8,
 
 
 def build_wavelet_tree_levelwise(seq: jax.Array, sigma: int,
-                                 sample_rate: int = 512) -> WaveletTree:
-    """Prior-work baseline [Shun'15]: O(n·logσ) work."""
+                                 sample_rate: int = 512,
+                                 fused: bool = True) -> WaveletTree:
+    """Prior-work baseline [Shun'15]: O(n·logσ) work.
+
+    ``fused=True`` applies each level's node-segmented partition as a
+    select-gather (full-width symbols still move every level — the
+    baseline's work bound is unchanged, only the scatter is gone).
+    """
     n = int(seq.shape[0])
     nbits = num_levels(sigma)
     node_starts = _node_starts_from_symbols(seq, nbits)
@@ -168,12 +307,22 @@ def build_wavelet_tree_levelwise(seq: jax.Array, sigma: int,
     level_words = []
     for l in range(nbits):
         bit = ((order >> _U32(nbits - 1 - l)) & _U32(1)).astype(_I32)
-        level_words.append(_pack_level(bit))
+        words = _pack_level(bit)
+        level_words.append(words)
         if l < nbits - 1:
-            nid = (order >> _U32(nbits - l)).astype(_I32) if l else \
-                jnp.zeros((n,), _I32)
-            dest = _segmented_partition_dest(nid, bit, l + 1)
-            order = order[_invert_permutation(dest)]
+            if fused:
+                nid = _level_nid(node_starts, l, n)
+                g = segmented_partition_gather(
+                    words, nid, node_starts[l][:1 << l], n)
+                order = order[g]
+            else:
+                nid = (order >> _U32(nbits - l)).astype(_I32) if l else \
+                    jnp.zeros((n,), _I32)
+                dest = _segmented_partition_dest(nid, bit, l + 1)
+                order = order[_invert_permutation(dest)]
+    if fused:
+        return _finalize_fused(level_words, node_starts, n, nbits,
+                               sample_rate)
     return _finalize(level_words, node_starts, n, nbits, sample_rate)
 
 
@@ -182,15 +331,22 @@ def build_wavelet_tree_levelwise(seq: jax.Array, sigma: int,
 # --------------------------------------------------------------------------
 
 def build_wavelet_tree_dd(seq: jax.Array, sigma: int, num_chunks: int,
-                          sample_rate: int = 512) -> WaveletTree:
+                          sample_rate: int = 512,
+                          fused: bool = True) -> WaveletTree:
     """Domain-decomposition construction.
 
     The P per-chunk builds run under ``vmap`` (the paper's "P processors");
     the merge computes, for every (level, chunk, node), the destination
     offset ``global_node_start + Σ_{c'<c} len(c', node) + within`` with one
-    cross-chunk prefix sum per level, then scatters. The paper copies at
-    word granularity with special boundary words; the TPU scatter is
-    element-granular (adaptation noted in DESIGN.md §2).
+    cross-chunk prefix sum per level. ``fused=True`` (default) realizes
+    both phases scatter-free: the per-chunk splits are segmented
+    select-gathers (per-chunk node offsets sliced from one chunk
+    histogram), and the merge becomes a *gather* — every (node, chunk)
+    pair is one output run whose start is ``global_node_start[v] +
+    across[c, v]``, so a run-start mark + running max assigns each output
+    position its source chunk/offset directly (the paper's word-granular
+    copy, with the boundary-word bookkeeping replaced by the mark trick).
+    ``fused=False`` keeps the historical element-granular scatter merge.
     """
     n = int(seq.shape[0])
     assert n % num_chunks == 0, "pad the sequence to a multiple of num_chunks"
@@ -199,6 +355,51 @@ def build_wavelet_tree_dd(seq: jax.Array, sigma: int, num_chunks: int,
     size = 1 << nbits
     node_starts = _node_starts_from_symbols(seq, nbits)
     chunks = seq.reshape(num_chunks, m).astype(_U32)
+
+    if fused:
+        def chunk_build(chunk):
+            """Per-chunk fused levelwise build: (nbits, m) bits + the
+            chunk's symbol histogram (feeds the merge offsets)."""
+            histc = jnp.zeros((size,), _I32).at[chunk.astype(_I32)].add(
+                1, mode="drop")
+            leafc = exclusive_sum(histc)
+            order = chunk
+            bits_out = []
+            for l in range(nbits):
+                bit = ((order >> _U32(nbits - 1 - l)) & _U32(1)).astype(_I32)
+                bits_out.append(bit)
+                if l < nbits - 1:
+                    starts_l = leafc[:: 1 << (nbits - l)]       # (2**l,)
+                    nid = segment_ids_from_starts(starts_l, m) if l else \
+                        jnp.zeros((m,), _I32)
+                    words = _pack_level(bit)
+                    g = segmented_partition_gather(words, nid, starts_l, m)
+                    order = order[g]
+            return jnp.stack(bits_out), histc
+
+        bits_all, hist_all = jax.vmap(chunk_build)(chunks)   # (P,nbits,m)
+        csum = exclusive_sum(hist_all, axis=1)               # (P, size)
+        p_out = jnp.arange(n, dtype=_I32)
+        level_words = []
+        for l in range(nbits):
+            nodes_l = 1 << l
+            sc = csum[:, :: 1 << (nbits - l)]                # (P, nodes_l)
+            cnt = jnp.concatenate(
+                [sc[:, 1:], jnp.full((num_chunks, 1), m, _I32)],
+                axis=1) - sc                                 # per-chunk len
+            across = exclusive_sum(cnt, axis=0)              # (P, nodes_l)
+            gs = node_starts[l][:nodes_l]
+            # output runs in (node-major, chunk-minor) order; run (v, c)
+            # starts at gs[v] + across[c, v] — globally non-decreasing
+            run_start = (gs[:, None] + across.T).reshape(-1)
+            rid = segment_ids_from_starts(run_start, n)
+            src_base = sc.T.reshape(-1)                      # rid -> sc[c,v]
+            src = ((rid % num_chunks) * m + src_base[rid]
+                   + (p_out - run_start[rid]))
+            merged = bits_all[:, l, :].reshape(-1)[src]
+            level_words.append(_pack_level(merged))
+        return _finalize_fused(level_words, node_starts, n, nbits,
+                               sample_rate)
 
     def chunk_levels(chunk):
         """Per-chunk levelwise build; returns (nbits, m) bits and node ids."""

@@ -16,6 +16,7 @@ from . import radix_rank as _radix_rank
 from . import rank_build as _rank_build
 from . import wm_level as _wm_level
 from . import wm_quantile as _wm_quantile
+from . import wt_level as _wt_level
 
 
 def _default_interpret() -> bool:
@@ -128,6 +129,34 @@ def wm_level_step_fused(sub: jax.Array, shift: int, n: int,
         sp, shift, n, interpret=interpret)
     wreal = (n + 31) // 32
     return dest[0, :n], bitmap[0, :wreal], total[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "nbkt", "n",
+                                             "interpret"))
+def wt_level_step_fused(sub: jax.Array, nid: jax.Array, shift: int,
+                        nbkt: int, n: int, interpret: bool | None = None):
+    """One fused *segmented* wavelet-tree level on narrow keys (n,).
+
+    ``nid``: (n,) int32 node id per element (non-decreasing), ``shift``:
+    bit position of this level's bit inside the key, ``nbkt`` = 2^(l+1)
+    the (node, bit) bucket count (≤ ``wt_level.MAX_KEYS``). Returns
+    (dest (n,) int32 stable per-node partition destinations,
+    bitmap ceil(n/32) uint32). Not vmap-safe (cross-grid scratch).
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    blk = _wt_level.BLOCK
+    npad = ((n + blk - 1) // blk) * blk
+    # padding: bit 0 + nid nbkt//2 -> key == nbkt, the sentinel bucket
+    # ordered after every real bucket (destinations land past n, trimmed)
+    sp = jnp.zeros((1, npad), jnp.uint32).at[0, :n].set(
+        sub.astype(jnp.uint32))
+    nidp = jnp.full((1, npad), nbkt // 2, jnp.int32).at[0, :n].set(
+        nid.astype(jnp.int32))
+    dest, bitmap = _wt_level.wt_level_fused_pallas(
+        sp, nidp, shift, nbkt, n, interpret=interpret)
+    wreal = (n + 31) // 32
+    return dest[0, :n], bitmap[0, :wreal]
 
 
 @functools.partial(jax.jit, static_argnames=("num_buckets", "interpret"))

@@ -131,3 +131,18 @@ def wm_level_step_ref(sub: jax.Array, shift: int, n: int):
     bitmap = bitops.pack_bits(bitops.pad_bits(bit.astype(jnp.uint8)))
     total_zeros = jnp.int32(n) - jnp.sum(bit, dtype=jnp.int32)
     return dest, bitmap, total_zeros
+
+
+def wt_level_step_ref(sub: jax.Array, nid: jax.Array, shift: int, n: int):
+    """(dest, bitmap) for one *segmented* wavelet-tree level: stable
+    destinations under a sort by (node id, level bit) — exact integer
+    semantics via a stable argsort."""
+    sub = sub[:n].astype(jnp.uint32)
+    nid = nid[:n].astype(jnp.int32)
+    bit = ((sub >> jnp.uint32(shift)) & jnp.uint32(1)).astype(jnp.int32)
+    key = (nid << 1) | bit
+    order = jnp.argsort(key, stable=True)
+    dest = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.arange(n, dtype=jnp.int32), unique_indices=True)
+    bitmap = bitops.pack_bits(bitops.pad_bits(bit.astype(jnp.uint8)))
+    return dest, bitmap

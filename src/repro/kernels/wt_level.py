@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: one fused *segmented* wavelet-tree level step.
+
+A wavelet-tree level partitions the narrow (τ-bit) short list *per node*:
+each element's stable destination is ``bucket_base[(nid<<1)|bit] +
+rank-within-bucket-before-it``. The bucket count is 2^(l+1), so unlike the
+wavelet-matrix step (2 buckets) the cross-block state is a histogram, not
+a pair of counters. Same single-launch two-pass structure as
+``wm_level.wm_level_fused_pallas``: the grid is (2, nblocks) and the TPU
+grid executes sequentially, so pass 0 accumulates per-block (node, bit)
+histograms into a VMEM scratch persisting across the whole grid, and pass
+1 derives the global bucket bases (exclusive sum over the total
+histogram) plus a running per-bucket carry to emit stable destinations
+and the packed bitmap — no XLA ops between phases, no HBM round-trip for
+the offsets. Because the scratch carries cross-step state, this kernel
+must NOT be wrapped in ``vmap``; deep levels whose bucket count exceeds
+``MAX_KEYS`` use the XLA segmented select-gather instead
+(``rank_select.segmented_partition_gather``).
+
+Padding convention: the wrapper pads keys into a sentinel bucket ordered
+after every real bucket, so padded destinations land past n and are
+trimmed; bitmap bits at padded positions are masked to 0.
+
+Block geometry: 1024 keys/grid step; VMEM ≈ BLOCK×NB one-hot (≤ 2.6 MB at
+MAX_KEYS) + nblocks×NB count scratch + 2×NB carry rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK = 1024
+_WPB = BLOCK // 32      # bitmap words per block
+MAX_KEYS = 512          # max real (node, bit) buckets = 2^(l+1)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _fused_kernel(sub_ref, nid_ref, dest_ref, bm_ref, cnt_ref, carry_ref,
+                  *, shift, nb, n_valid):
+    p = pl.program_id(0)                        # 0: count, 1: apply
+    i = pl.program_id(1)
+    sub = sub_ref[...]                                      # (1, BLOCK)
+    nid = nid_ref[...]                                      # (1, BLOCK)
+    bit = ((sub >> jnp.uint32(shift)) & jnp.uint32(1)).astype(jnp.int32)
+    key = (nid << 1) | bit                                  # (1, BLOCK)
+    iota_b = jax.lax.broadcasted_iota(jnp.int32, (BLOCK, nb), 1)
+    onehot = (key.reshape(BLOCK, 1) == iota_b).astype(jnp.int32)
+    hist = jnp.sum(onehot, axis=0)                          # (nb,)
+
+    @pl.when(p == 0)
+    def _count():
+        cnt_ref[i, :] = hist
+
+    @pl.when((p == 1) & (i == 0))
+    def _init():
+        totals = jnp.sum(cnt_ref[...], axis=0)
+        carry_ref[0, :] = jnp.cumsum(totals) - totals       # bucket bases
+        carry_ref[1, :] = jnp.zeros((nb,), jnp.int32)
+
+    off = carry_ref[0, :] + carry_ref[1, :]                 # (nb,)
+    within = jnp.cumsum(onehot, axis=0) - onehot            # (BLOCK, nb)
+    dest = jnp.sum(onehot * (off[None, :] + within), axis=1)
+    dest_ref[...] = dest.reshape(1, BLOCK)
+    idx_local = jax.lax.broadcasted_iota(jnp.int32, (1, BLOCK), 1)
+    gidx = i * BLOCK + idx_local
+    bm_bit = jnp.where(gidx < n_valid, bit, 0).astype(jnp.uint32)
+    b2 = bm_bit.reshape(_WPB, 32)
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, b2.shape, 1)
+    bm_ref[...] = jnp.sum(b2 << shifts, axis=1, dtype=jnp.uint32
+                          ).reshape(1, _WPB)
+
+    @pl.when(p == 1)
+    def _advance():
+        carry_ref[1, :] = carry_ref[1, :] + hist
+
+
+def wt_level_fused_pallas(sub: jax.Array, nid: jax.Array, shift: int,
+                          nbkt: int, n_valid: int, *,
+                          interpret: bool = False):
+    """Single-launch fused segmented level step.
+
+    ``sub``: (1, N) uint32 keys, ``nid``: (1, N) int32 node ids, N a
+    multiple of BLOCK; padded elements must carry key ``(nid<<1)|bit ==
+    nbkt`` (the sentinel bucket). Returns (dest (1, N) int32,
+    bitmap (1, N/32) uint32). Pass 0 writes garbage dest/bitmap blocks;
+    pass 1 revisits and overwrites them (the sequential TPU grid
+    guarantees the ordering). Not vmap-safe.
+    """
+    _, n = sub.shape
+    assert n % BLOCK == 0
+    assert nbkt <= MAX_KEYS
+    nblocks = n // BLOCK
+    nb = _round_up(nbkt + 1, 128)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, shift=shift, nb=nb,
+                          n_valid=n_valid),
+        grid=(2, nblocks),
+        in_specs=[pl.BlockSpec((1, BLOCK), lambda p, i: (0, i)),
+                  pl.BlockSpec((1, BLOCK), lambda p, i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, BLOCK), lambda p, i: (0, i)),
+            pl.BlockSpec((1, _WPB), lambda p, i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, n), jnp.int32),
+            jax.ShapeDtypeStruct((1, n // 32), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.VMEM((nblocks, nb), jnp.int32),
+                        pltpu.VMEM((2, nb), jnp.int32)],
+        interpret=interpret,
+    )(sub, nid)

@@ -283,3 +283,45 @@ def test_wm_quantile_sharded_kernel(n, sigma, shard_bits):
         sl = np.sort(toks[lo[i]:hi[i]])
         w = sl[min(k[i], len(sl) - 1)] if len(sl) else -1
         assert got[i] == w, (i, lo[i], hi[i], k[i])
+
+
+# ---------------------------------------------------------------------------
+# wt_level (fused segmented tree level step)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 33, 1024, 1500, 2049])
+@pytest.mark.parametrize("nodes", [1, 4, 64])
+def test_wt_level_fused_shapes(n, nodes):
+    rng = np.random.default_rng(n + nodes)
+    nid = np.sort(rng.integers(0, nodes, n)).astype(np.int32)
+    sub = rng.integers(0, 1 << 8, n).astype(np.uint32)
+    for shift in (0, 3, 7):
+        dest, bm = ops.wt_level_step_fused(jnp.asarray(sub),
+                                           jnp.asarray(nid), shift,
+                                           2 * nodes, n, interpret=True)
+        dref, bref = ref.wt_level_step_ref(jnp.asarray(sub),
+                                           jnp.asarray(nid), shift, n)
+        assert np.array_equal(np.asarray(dest), np.asarray(dref)), shift
+        assert np.array_equal(np.asarray(bm), np.asarray(bref)), shift
+
+
+def test_wt_level_fused_dest_is_segmented_partition():
+    """dest realizes the stable per-node 0/1 partition exactly."""
+    rng = np.random.default_rng(0)
+    n, nodes = 3000, 16
+    nid = np.sort(rng.integers(0, nodes, n)).astype(np.int32)
+    sub = rng.integers(0, 256, n).astype(np.uint32)
+    shift = 4
+    dest, _ = ops.wt_level_step_fused(jnp.asarray(sub), jnp.asarray(nid),
+                                      shift, 2 * nodes, n, interpret=True)
+    dest = np.asarray(dest)
+    assert np.array_equal(np.sort(dest), np.arange(n))      # a permutation
+    out_nid = np.empty(n, np.int32)
+    out_bit = np.empty(n, np.int32)
+    out_src = np.empty(n, np.int64)
+    bit = (sub >> shift) & 1
+    out_nid[dest], out_bit[dest], out_src[dest] = nid, bit, np.arange(n)
+    key = out_nid * 2 + out_bit
+    assert np.all(np.diff(key) >= 0)                        # grouped
+    same = key[1:] == key[:-1]
+    assert np.all(out_src[1:][same] > out_src[:-1][same])   # stable

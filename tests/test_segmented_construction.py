@@ -1,0 +1,179 @@
+"""Segmented select-gather fast path vs the scatter baselines.
+
+The acceptance contract for PR 5's fused tree-family builders: every
+fused build (`build_wavelet_tree` τ-chunk, levelwise, domain-decomposed,
+Huffman-shaped, multiary d-way) must be *bit-identical* to its
+``fused=False`` scatter baseline — across alphabet sizes, τ, big-step
+backends, degrees, and awkward (odd / non-block-multiple) lengths — and
+the ``segmented_partition_gather`` primitives must match a stable-sort
+oracle directly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitops
+from repro.core.huffman import build_huffman_wavelet_tree, huffman_codebook
+from repro.core.multiary import build_multiary_wavelet_tree
+from repro.core.rank_select import (segmented_partition_gather,
+                                    segmented_partition_gather_fields)
+from repro.core.scan import segment_ids_from_starts
+from repro.core.wavelet_tree import (build_wavelet_tree,
+                                     build_wavelet_tree_dd,
+                                     build_wavelet_tree_levelwise)
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(la, lb))
+
+
+# --------------------------------------------------------------------------
+# primitive vs stable-sort oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 33, 777, 1025])
+@pytest.mark.parametrize("nodes", [1, 4, 16])
+def test_segmented_partition_gather_oracle(n, nodes):
+    rng = np.random.default_rng(n * 31 + nodes)
+    nid = np.sort(rng.integers(0, nodes, n)).astype(np.int32)
+    bit = rng.integers(0, 2, n).astype(np.int32)
+    starts = np.searchsorted(nid, np.arange(nodes)).astype(np.int32)
+    words = bitops.pack_bits(bitops.pad_bits(jnp.asarray(bit, jnp.uint8)))
+    g = np.asarray(segmented_partition_gather(
+        words, jnp.asarray(nid), jnp.asarray(starts), n))
+    oracle = np.argsort(nid * 2 + bit, kind="stable")
+    assert np.array_equal(g, oracle)
+    sid = np.asarray(segment_ids_from_starts(jnp.asarray(starts), n))
+    assert np.array_equal(sid, nid)
+
+
+@pytest.mark.parametrize("n", [1, 33, 777, 1025])
+@pytest.mark.parametrize("width", [1, 2, 4])        # d in {2, 4, 16}
+def test_segmented_partition_gather_fields_oracle(n, width):
+    rng = np.random.default_rng(n * 7 + width)
+    d = 1 << width
+    nodes = 8
+    nid = np.sort(rng.integers(0, nodes, n)).astype(np.int32)
+    dig = rng.integers(0, d, n).astype(np.int32)
+    starts = np.searchsorted(nid, np.arange(nodes)).astype(np.int32)
+    g = np.asarray(segmented_partition_gather_fields(
+        jnp.asarray(dig), width, jnp.asarray(nid), jnp.asarray(starts), n))
+    oracle = np.argsort(nid * d + dig, kind="stable")
+    assert np.array_equal(g, oracle)
+
+
+# --------------------------------------------------------------------------
+# fused builders vs scatter baselines (bit-identical pytrees)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sigma", [2, 256, 1 << 16])
+@pytest.mark.parametrize("tau", [4, 8])
+@pytest.mark.parametrize("big_step", ["compose", "radix", "xla"])
+def test_fused_tree_matches_steps(sigma, tau, big_step):
+    rng = np.random.default_rng(sigma * 13 + tau)
+    for n in (1, 33, 777, 1025):               # odd / non-block-multiple n
+        seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+        fused = build_wavelet_tree(seq, sigma, tau=tau, big_step=big_step,
+                                   sample_rate=128)
+        steps = build_wavelet_tree(seq, sigma, tau=tau, big_step=big_step,
+                                   sample_rate=128, fused=False)
+        assert _leaves_equal(fused, steps), (n, sigma, tau, big_step)
+
+
+def test_fused_levelwise_and_dd_match():
+    rng = np.random.default_rng(5)
+    for n, sigma in ((501, 2), (1337, 256), (900, 1 << 16)):
+        seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+        fused = build_wavelet_tree_levelwise(seq, sigma, sample_rate=128)
+        steps = build_wavelet_tree_levelwise(seq, sigma, sample_rate=128,
+                                             fused=False)
+        assert _leaves_equal(fused, steps), (n, sigma)
+    for m, chunks, sigma in ((7, 4, 17), (128, 8, 256), (50, 16, 1000)):
+        seq = jnp.asarray(rng.integers(0, sigma, m * chunks)
+                          .astype(np.uint32))
+        fused = build_wavelet_tree_dd(seq, sigma, chunks, sample_rate=128)
+        steps = build_wavelet_tree_dd(seq, sigma, chunks, sample_rate=128,
+                                      fused=False)
+        assert _leaves_equal(fused, steps), (m, chunks, sigma)
+
+
+def test_fused_tree_kernel_path_matches():
+    """use_kernels=True (Pallas wt_level, interpret off-TPU) is
+    bit-identical; deep levels past the kernel's bucket bound exercise
+    the mixed kernel/XLA route."""
+    rng = np.random.default_rng(11)
+    for n, sigma, tau in ((1500, 256, 8), (900, 37, 4), (1025, 1 << 16, 8)):
+        seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+        fused = build_wavelet_tree(seq, sigma, tau=tau, sample_rate=128)
+        kern = build_wavelet_tree(seq, sigma, tau=tau, sample_rate=128,
+                                  use_kernels=True)
+        assert _leaves_equal(fused, kern), (n, sigma, tau)
+
+
+@pytest.mark.parametrize("sigma,zipf", [(2, 1.0), (17, 1.5), (64, 1.2),
+                                        (256, 0.8)])
+def test_fused_huffman_matches(sigma, zipf):
+    rng = np.random.default_rng(sigma)
+    for n in (1, 333, 1337):
+        p = np.arange(1, sigma + 1) ** (-zipf)
+        seq = rng.choice(sigma, size=n, p=p / p.sum()).astype(np.uint32)
+        freqs = np.bincount(seq, minlength=sigma) + 1
+        codes, lengths, max_len = huffman_codebook(freqs)
+        fused = build_huffman_wavelet_tree(
+            jnp.asarray(seq), jnp.asarray(codes), jnp.asarray(lengths),
+            max_len)
+        steps = build_huffman_wavelet_tree(
+            jnp.asarray(seq), jnp.asarray(codes), jnp.asarray(lengths),
+            max_len, fused=False)
+        assert _leaves_equal(fused, steps), (sigma, zipf, n)
+
+
+def test_huffman_traced_codebook_falls_back():
+    """Tracing the codewords (jit without closing over them) still works
+    via the scatter path and produces the same tree."""
+    rng = np.random.default_rng(9)
+    sigma, n = 40, 700
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    freqs = np.bincount(seq, minlength=sigma) + 1
+    codes, lengths, max_len = huffman_codebook(freqs)
+    import functools
+    f = jax.jit(functools.partial(build_huffman_wavelet_tree,
+                                  max_len=max_len))
+    traced = f(jnp.asarray(seq), jnp.asarray(codes), jnp.asarray(lengths))
+    fused = build_huffman_wavelet_tree(jnp.asarray(seq), jnp.asarray(codes),
+                                       jnp.asarray(lengths), max_len)
+    assert _leaves_equal(traced, fused)
+
+
+@pytest.mark.parametrize("width", [2, 4])           # d in {4, 16}
+@pytest.mark.parametrize("sigma", [2, 256, 1 << 16])
+def test_fused_multiary_matches(width, sigma):
+    rng = np.random.default_rng(width * 100 + 1)
+    for n in (1, 333, 1025):
+        seq = jnp.asarray(rng.integers(0, sigma, n).astype(np.uint32))
+        fused = build_multiary_wavelet_tree(seq, sigma, width=width)
+        steps = build_multiary_wavelet_tree(seq, sigma, width=width,
+                                            fused=False)
+        assert _leaves_equal(fused, steps), (width, sigma, n)
+
+
+def test_fused_tree_queries_end_to_end():
+    """access/rank/select answers on fused builds are exact."""
+    from repro.core.wavelet_tree import wt_access, wt_rank, wt_select
+    rng = np.random.default_rng(4)
+    n, sigma = 2000, 300
+    seq = rng.integers(0, sigma, n).astype(np.uint32)
+    wt = build_wavelet_tree(jnp.asarray(seq), sigma, sample_rate=128)
+    assert np.array_equal(np.asarray(wt_access(wt, jnp.arange(n))), seq)
+    c = int(seq[0])
+    idx = np.unique(rng.integers(0, n + 1, 32))
+    r = np.asarray(wt_rank(wt, jnp.full(len(idx), c), jnp.asarray(idx)))
+    assert np.array_equal(r, [(seq[:i] == c).sum() for i in idx])
+    occ = np.flatnonzero(seq == c)
+    ks = np.arange(min(8, len(occ)))
+    s = np.asarray(wt_select(wt, jnp.full(len(ks), c), jnp.asarray(ks)))
+    assert np.array_equal(s, occ[ks])
