@@ -1,0 +1,119 @@
+"""Fault-tolerance overhead: snapshot restore with/without checksum
+verification (the ≤10% clean-restore budget), structural self-check and
+repair cost, and degraded-mode query overhead vs full availability.
+
+Verification design under test: the clean restore path pays ONLY the
+per-leaf crc32 pass (memory-bandwidth); the structural recomputation in
+``robust.verify`` and the rebuilds in ``robust.repair`` are incident
+paths, priced here so an operator knows what a detection costs.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analytics import build_sharded_analytics, load_analytics, \
+    save_analytics
+from repro.data import make_corpus
+from repro.robust import (corrupt_snapshot_leaf, repair_analytics,
+                          verify_analytics)
+
+from .common import record, save, time_fn
+
+
+def _median_restore_s(directory, iters: int = 3, **kwargs) -> float:
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        eng = load_analytics(directory, **kwargs)
+        jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def run(n: int = 1 << 18, out: list | None = None) -> list:
+    rows = out if out is not None else []
+    vocab = 4096
+    toks = np.asarray(make_corpus(n, vocab, seed=0), np.int64)
+    eng = build_sharded_analytics(toks, vocab, shard_bits=14)
+    jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
+
+    scratch = Path(tempfile.mkdtemp(prefix="bench_robust_"))
+    try:
+        snap = scratch / "snapshot"
+        t0 = time.perf_counter()
+        save_analytics(eng, snap, extra_meta={"corpus_seed": 0})
+        t_save = time.perf_counter() - t0
+        record(rows, f"snapshot_save_n{n}", t_save,
+               mb=round(sum(leaf.size * leaf.dtype.itemsize for leaf in
+                            jax.tree.leaves(eng.shards)) / 2**20, 1))
+
+        # --- clean restore: unverified vs checksum-verified --------------
+        t_plain = _median_restore_s(snap, verify=False)
+        t_verified = _median_restore_s(snap, verify=True)
+        overhead_pct = 100.0 * (t_verified - t_plain) / t_plain
+        record(rows, f"restore_unverified_n{n}", t_plain)
+        record(rows, f"restore_verified_n{n}", t_verified,
+               verify_overhead_pct=round(overhead_pct, 1),
+               within_10pct_budget=bool(overhead_pct <= 10.0))
+
+        # --- incident paths: structural verify, checksum repair ----------
+        t0 = time.perf_counter()
+        report = verify_analytics(eng)
+        t_structural = time.perf_counter() - t0
+        record(rows, f"structural_verify_n{n}", t_structural,
+               ok=report.ok, violations=len(report.violations))
+
+        t0 = time.perf_counter()
+        healed = repair_analytics(eng)
+        jax.block_until_ready(jax.tree.leaves(healed.shards)[0])
+        t_repair = time.perf_counter() - t0
+        record(rows, f"repair_all_shards_n{n}", t_repair,
+               num_shards=eng.num_shards)
+
+        # --- detect + repair round trip on a corrupted snapshot ----------
+        corrupt_snapshot_leaf(snap, seed=1, leaf_match="superblock")
+        t0 = time.perf_counter()
+        healed = load_analytics(snap)
+        jax.block_until_ready(jax.tree.leaves(healed.shards)[0])
+        t_heal = time.perf_counter() - t0
+        record(rows, f"restore_detect_repair_n{n}", t_heal,
+               x_clean_restore=round(t_heal / max(t_verified, 1e-9), 1))
+    finally:
+        shutil.rmtree(scratch, ignore_errors=True)
+
+    # --- degraded-mode query overhead (mask vs no mask) -------------------
+    rng = np.random.default_rng(2)
+    B = 1024
+    lo = jnp.asarray(rng.integers(0, max(1, n - 1), B).astype(np.int32))
+    hi = jnp.minimum(lo + jnp.asarray(
+        rng.integers(1, max(2, n // 4), B).astype(np.int32)), n)
+    k = jnp.asarray(rng.integers(0, 8, B).astype(np.int32))
+    q = jax.jit(lambda e, a, b, c: e.range_quantile(a, b, c))
+    t_full = time_fn(q, eng, lo, hi, k)
+    record(rows, f"quantile_full_b{B}_n{n}", t_full,
+           queries_per_s=round(B / t_full, 1))
+    deg = eng.drop_shards(np.asarray([0], np.int32))
+    t_deg = time_fn(q, deg, lo, hi, k)
+    record(rows, f"quantile_degraded_b{B}_n{n}", t_deg,
+           queries_per_s=round(B / t_deg, 1),
+           overhead_pct=round(100.0 * (t_deg - t_full) / t_full, 1))
+    bounds = jax.jit(lambda e, a, b: e.range_count_bounds(a, b, 0, 64))
+    t_b = time_fn(bounds, deg, lo, hi)
+    record(rows, f"count_bounds_degraded_b{B}_n{n}", t_b,
+           queries_per_s=round(B / t_b, 1))
+
+    if out is None:
+        save(rows, "robust.json")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import subprocess
 import time
 from pathlib import Path
 from typing import Callable
@@ -9,6 +10,34 @@ from typing import Callable
 import jax
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
+
+#: default RNG seed shared by every suite's synthetic inputs — stamped
+#: into the bench JSON so a result is reproducible from its artifact.
+BENCH_SEED = 0
+
+
+def run_meta(seed: int = BENCH_SEED) -> dict:
+    """Provenance stamped into every bench JSON: the exact code (git
+    commit + dirty flag), runtime (jax version, backend, device count),
+    and RNG seed a run used."""
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=Path(__file__).parent,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+        dirty = bool(subprocess.run(
+            ["git", "status", "--porcelain"], cwd=Path(__file__).parent,
+            capture_output=True, text=True, timeout=10).stdout.strip())
+    except Exception:                                     # noqa: BLE001
+        commit, dirty = "unknown", False
+    return {
+        "git_commit": commit or "unknown",
+        "git_dirty": dirty,
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.local_device_count(),
+        "seed": int(seed),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
 
 
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -32,10 +61,13 @@ def record(rows: list, name: str, seconds: float, **derived) -> dict:
     return row
 
 
-def save(rows: list, fname: str) -> Path:
-    """Persist rows under results/bench/, creating the directory tree on
-    first run. numpy scalars in derived fields serialize as plain floats."""
+def save(rows: list, fname: str, seed: int = BENCH_SEED) -> Path:
+    """Persist ``{"meta": provenance, "rows": rows}`` under results/bench/,
+    creating the directory tree on first run. The meta block (git commit,
+    jax version, RNG seed, …) makes every artifact self-describing. numpy
+    scalars in derived fields serialize as plain floats."""
     path = RESULTS_DIR / fname
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps(rows, indent=1, default=float))
+    path.write_text(json.dumps({"meta": run_meta(seed), "rows": rows},
+                               indent=1, default=float))
     return path

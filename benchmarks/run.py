@@ -13,7 +13,8 @@ import time
 
 from . import (bench_analytics, bench_construction, bench_corpus_store,
                bench_huffman, bench_index, bench_kernels, bench_multiary,
-               bench_rank_select, bench_wavelet_matrix, bench_wavelet_tree)
+               bench_rank_select, bench_robust, bench_wavelet_matrix,
+               bench_wavelet_tree)
 from .common import save
 
 SUITES = {
@@ -27,6 +28,7 @@ SUITES = {
     "corpus": ("corpus_store.json", bench_corpus_store.run),
     "index": ("index.json", bench_index.run),
     "analytics": ("analytics.json", bench_analytics.run),
+    "robust": ("robust.json", bench_robust.run),
 }
 
 

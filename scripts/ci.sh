@@ -18,6 +18,14 @@ python -m repro.launch.index --smoke
 echo "== range analytics smoke =="
 python -m repro.launch.analytics --smoke
 
+# every fault class injected against a live snapshot + engine: silent
+# leaf corruption (detected by checksums, repaired bit-identically),
+# primary-bitmap corruption (detected, rebuild signalled), torn/partial
+# writes (skipped by step discovery), in-memory corruption (structural
+# verify + repair), shard loss (degraded serving with coverage bounds)
+echo "== fault-injection smoke (chaos) =="
+python -m repro.launch.chaos --smoke
+
 # (fused-vs-oracle equivalence and the interpret-mode kernel tests —
 # tests/test_construction_fast.py, tests/test_segmented_construction.py,
 # tests/test_kernels.py — already run as part of the tier-1 suite above;

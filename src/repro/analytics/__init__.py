@@ -15,8 +15,10 @@ layout); persisted snapshots in ``snapshot`` (serving restarts skip the
 build).
 """
 from .engine import (ShardedAnalytics, build_sharded_analytics,
-                     local_ranges, sharded_range_count,
+                     local_ranges, mask_ranges, sharded_coverage,
+                     sharded_range_count, sharded_range_count_bounds,
                      sharded_range_distinct, sharded_range_histogram,
+                     sharded_range_histogram_bounds,
                      sharded_range_quantile, sharded_range_quantile_fused,
                      sharded_range_topk, sharded_range_topk_greedy)
 from .range_ops import (range_count, range_distinct, range_histogram,
@@ -26,8 +28,11 @@ from .snapshot import load_analytics, save_analytics, snapshot_meta
 
 __all__ = [
     "ShardedAnalytics", "build_sharded_analytics", "local_ranges",
-    "sharded_range_count", "sharded_range_distinct",
-    "sharded_range_histogram", "sharded_range_quantile",
+    "mask_ranges", "sharded_coverage",
+    "sharded_range_count", "sharded_range_count_bounds",
+    "sharded_range_distinct",
+    "sharded_range_histogram", "sharded_range_histogram_bounds",
+    "sharded_range_quantile",
     "sharded_range_quantile_fused",
     "sharded_range_topk", "sharded_range_topk_greedy",
     "range_count", "range_distinct", "range_histogram", "range_quantile",

@@ -20,9 +20,20 @@ approximations):
 Module-level functions take the raw stacked ``WaveletMatrix`` + geometry so
 ``CompressedCorpus`` can delegate without a circular import; the
 ``ShardedAnalytics`` dataclass is the serving-layer handle.
+
+Degraded mode: every op takes an optional per-shard ``available`` mask
+(engine field, default all-available). An unavailable shard contributes an
+*empty* local range — its ``hi`` clamps to ``lo`` before the reduction —
+so every op serves exactly the surviving data with no special-casing in
+the descent logic: counts/histograms/distinct cover only available
+shards, quantiles rank within the covered positions. ``coverage`` reports
+the covered fraction per query, and ``range_count_bounds`` /
+``range_histogram_bounds`` bracket the true full-corpus answer (lower =
+covered count, upper = lower + uncovered positions).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -64,33 +75,93 @@ def local_ranges(shard_bits: int, num_shards: int, n: int,
     return los, his
 
 
+def mask_ranges(los: jax.Array, his: jax.Array, available):
+    """Clamp the local ranges of unavailable shards to empty.
+
+    ``available``: (S,) bool mask or None (all available). Emptying the
+    range is the single masking primitive every degraded-mode op shares —
+    the descent/reduction logic downstream never sees the mask.
+    """
+    if available is None:
+        return los, his
+    S = los.shape[0]
+    m = jnp.asarray(available, bool).reshape((S,) + (1,) * (los.ndim - 1))
+    return los, jnp.where(m, his, los)
+
+
 # --------------------------------------------------------------------------
 # exact cross-shard ops on the stacked pytree
 # --------------------------------------------------------------------------
 
 def sharded_range_count(shards: WaveletMatrix, shard_bits: int, n: int,
-                        lo, hi, sym_lo, sym_hi) -> jax.Array:
+                        lo, hi, sym_lo, sym_hi,
+                        available=None) -> jax.Array:
     """Orthogonal range count over the whole corpus: per-shard counts sum.
-    Broadcasts over batched query arrays."""
+    Broadcasts over batched query arrays. ``available`` masks shards out
+    (degraded mode: the count covers surviving shards only)."""
     S = _num_shards(shards)
-    los, his = local_ranges(shard_bits, S, n, lo, hi)
+    los, his = mask_ranges(*local_ranges(shard_bits, S, n, lo, hi),
+                           available)
     per = jax.vmap(
         lambda wm, a, b: range_ops.range_count(wm, a, b, sym_lo, sym_hi)
     )(shards, los, his)
     return jnp.sum(per, axis=0)
 
 
+def sharded_coverage(shard_bits: int, num_shards: int, n: int, lo, hi,
+                     available) -> jax.Array:
+    """Fraction of [lo, hi) positions living on available shards.
+
+    1.0 for fully-covered (or empty) queries; broadcasts over batches.
+    The explicit honesty signal degraded-mode answers ship with.
+    """
+    los, his = local_ranges(shard_bits, num_shards, n, lo, hi)
+    total = jnp.sum(his - los, axis=0)
+    _, mhis = mask_ranges(los, his, available)
+    covered = jnp.sum(mhis - los, axis=0)
+    return jnp.where(total > 0,
+                     covered.astype(jnp.float32)
+                     / jnp.maximum(total, 1).astype(jnp.float32),
+                     jnp.float32(1.0))
+
+
+def sharded_range_count_bounds(shards: WaveletMatrix, shard_bits: int,
+                               n: int, lo, hi, sym_lo, sym_hi,
+                               available=None):
+    """(lower, upper, coverage) bracketing the true full-corpus count.
+
+    ``lower`` counts surviving shards; every uncovered position could hold
+    a matching symbol, so ``upper = lower + uncovered``. With full
+    availability lower == upper == the exact count.
+    """
+    S = _num_shards(shards)
+    lower = sharded_range_count(shards, shard_bits, n, lo, hi,
+                                sym_lo, sym_hi, available)
+    los, his = local_ranges(shard_bits, S, n, lo, hi)
+    total = jnp.sum(his - los, axis=0)
+    _, mhis = mask_ranges(los, his, available)
+    covered = jnp.sum(mhis - los, axis=0)
+    cov = jnp.where(total > 0,
+                    covered.astype(jnp.float32)
+                    / jnp.maximum(total, 1).astype(jnp.float32),
+                    jnp.float32(1.0))
+    return lower, lower + (total - covered), cov
+
+
 def sharded_range_quantile(shards: WaveletMatrix, shard_bits: int, n: int,
-                           lo, hi, k) -> jax.Array:
+                           lo, hi, k, available=None) -> jax.Array:
     """Global k-th smallest symbol in [lo, hi): count-then-refine descent.
 
     Every shard keeps its own interval; the branch decision at each level
     compares k against the *summed* zero count, then all shards take the
     same child. O(S·logσ) rank probes per query. Broadcasts over batches.
+    Under an ``available`` mask the descent ranks within the covered
+    positions only (k clips to the covered total).
     """
     S = _num_shards(shards)
     nbits = shards.nbits
-    los, his = local_ranges(shard_bits, S, n, lo, hi)
+    los, his = mask_ranges(*local_ranges(shard_bits, S, n, lo, hi),
+                           available)
     total = jnp.sum(his - los, axis=0)
     k = jnp.clip(jnp.asarray(k, _I32), 0, jnp.maximum(total - 1, 0))
     empty = total <= 0
@@ -112,33 +183,39 @@ def sharded_range_quantile(shards: WaveletMatrix, shard_bits: int, n: int,
 
 def sharded_range_quantile_fused(shards: WaveletMatrix, shard_bits: int,
                                  n: int, lo, hi, k,
-                                 interpret: bool | None = None) -> jax.Array:
+                                 interpret: bool | None = None,
+                                 available=None) -> jax.Array:
     """Kernel form of ``sharded_range_quantile``: the whole count-then-
     refine descent (all shards × all levels) runs as ONE fused Pallas
     launch per query block (``kernels.wm_quantile_sharded_batch``), with
     every shard's bitmaps + rank directories resident in VMEM. Exact same
     results; (Q,) batches only (the XLA path broadcasts arbitrary shapes).
+    Degraded mode (an ``available`` mask) routes to the XLA descent — the
+    fused kernel assumes full shard residency.
     """
+    if available is not None:
+        return sharded_range_quantile(shards, shard_bits, n, lo, hi, k,
+                                      available)
     from repro.kernels import ops as _kops
     return _kops.wm_quantile_sharded_batch(shards, shard_bits, n, lo, hi, k,
                                            interpret=interpret)
 
 
 def sharded_range_topk(shards: WaveletMatrix, shard_bits: int, n: int,
-                       lo, hi, k: int):
+                       lo, hi, k: int, available=None):
     """Exact global top-k: per-shard histograms sum, then one ``top_k``.
 
     ``lo``/``hi`` may be scalars or (B,) batches; returns (..., k) syms and
     counts sorted by descending global count, (-1, 0) padded.
     """
-    hist = sharded_range_histogram(shards, shard_bits, n, lo, hi)
+    hist = sharded_range_histogram(shards, shard_bits, n, lo, hi, available)
     return range_ops.topk_from_histogram(hist, k)
 
 
 def sharded_range_topk_greedy(shards: WaveletMatrix, shard_bits: int,
                               n: int, lo, hi, k: int,
                               budget: int | None = None,
-                              prune: bool = True):
+                              prune: bool = True, available=None):
     """Greedy global top-k: ONE frontier whose nodes carry a per-shard
     interval vector (weight = summed width) — a true global walk, not a
     merge of per-shard top-k lists. Same budget/exactness/``prune``
@@ -149,7 +226,8 @@ def sharded_range_topk_greedy(shards: WaveletMatrix, shard_bits: int,
     wms = [_shard(shards, s) for s in range(S)]
 
     def one(lo_q, hi_q):
-        los, his = local_ranges(shard_bits, S, n, lo_q, hi_q)
+        los, his = mask_ranges(*local_ranges(shard_bits, S, n, lo_q, hi_q),
+                               available)
         return range_ops._topk_frontier(
             wms, [los[s] for s in range(S)], [his[s] for s in range(S)],
             k, budget, prune)[:2]
@@ -161,13 +239,14 @@ def sharded_range_topk_greedy(shards: WaveletMatrix, shard_bits: int,
 
 
 def sharded_range_histogram(shards: WaveletMatrix, shard_bits: int, n: int,
-                            lo, hi) -> jax.Array:
+                            lo, hi, available=None) -> jax.Array:
     """Global per-symbol counts for [lo, hi): per-shard histograms sum.
     Scalar or (B,) queries → (..., 2^nbits) int32."""
     S = _num_shards(shards)
 
     def one(lo_q, hi_q):
-        los, his = local_ranges(shard_bits, S, n, lo_q, hi_q)
+        los, his = mask_ranges(*local_ranges(shard_bits, S, n, lo_q, hi_q),
+                               available)
         per = jax.vmap(
             lambda wm, a, b: range_ops.range_histogram(wm, a, b)
         )(shards, los, his)
@@ -179,10 +258,28 @@ def sharded_range_histogram(shards: WaveletMatrix, shard_bits: int, n: int,
     return jax.vmap(one)(lo, jnp.asarray(hi, _I32))
 
 
+def sharded_range_histogram_bounds(shards: WaveletMatrix, shard_bits: int,
+                                   n: int, lo, hi, available=None):
+    """(hist_lower, uncovered, coverage): per-symbol lower bounds plus the
+    per-query count of uncovered positions — any symbol's true count is in
+    [hist_lower[c], hist_lower[c] + uncovered]."""
+    S = _num_shards(shards)
+    hist = sharded_range_histogram(shards, shard_bits, n, lo, hi, available)
+    los, his = local_ranges(shard_bits, S, n, lo, hi)
+    total = jnp.sum(his - los, axis=0)
+    _, mhis = mask_ranges(los, his, available)
+    covered = jnp.sum(mhis - los, axis=0)
+    cov = jnp.where(total > 0,
+                    covered.astype(jnp.float32)
+                    / jnp.maximum(total, 1).astype(jnp.float32),
+                    jnp.float32(1.0))
+    return hist, total - covered, cov
+
+
 def sharded_range_distinct(shards: WaveletMatrix, shard_bits: int, n: int,
-                           lo, hi) -> jax.Array:
+                           lo, hi, available=None) -> jax.Array:
     """# of distinct symbols in global [lo, hi) (union across shards)."""
-    hist = sharded_range_histogram(shards, shard_bits, n, lo, hi)
+    hist = sharded_range_histogram(shards, shard_bits, n, lo, hi, available)
     return jnp.sum(hist > 0, axis=-1).astype(_I32)
 
 
@@ -203,6 +300,10 @@ class ShardedAnalytics:
     n: int = field(metadata=dict(static=True))
     sigma: int = field(metadata=dict(static=True))
     shard_bits: int = field(metadata=dict(static=True))
+    #: (S,) bool per-shard availability, or None for full availability.
+    #: Unavailable shards are served around, not crashed into — see the
+    #: module docstring's degraded-mode contract.
+    available: jax.Array | None = None
 
     @property
     def num_shards(self) -> int:
@@ -211,6 +312,36 @@ class ShardedAnalytics:
     @property
     def shard_size(self) -> int:
         return 1 << self.shard_bits
+
+    @property
+    def degraded(self) -> bool:
+        return self.available is not None
+
+    # ---- availability management --------------------------------------
+    def with_availability(self, available) -> "ShardedAnalytics":
+        """Engine serving only the shards where ``available`` is True
+        (pass ``None`` to restore full availability)."""
+        if available is not None:
+            available = jnp.asarray(available, bool)
+            if available.shape != (self.num_shards,):
+                raise ValueError(
+                    f"availability mask shape {available.shape} != "
+                    f"({self.num_shards},)")
+        return dataclasses.replace(self, available=available)
+
+    def drop_shards(self, shard_ids) -> "ShardedAnalytics":
+        """Mark the given shard indices unavailable (on top of the current
+        mask) — the degraded-serving entry point for lost shards."""
+        mask = (jnp.ones((self.num_shards,), bool)
+                if self.available is None else self.available)
+        mask = mask.at[jnp.asarray(shard_ids, _I32)].set(False)
+        return dataclasses.replace(self, available=mask)
+
+    def coverage(self, lo, hi) -> jax.Array:
+        """Fraction of [lo, hi) positions on available shards (1.0 when
+        the engine is fully available)."""
+        return sharded_coverage(self.shard_bits, self.num_shards, self.n,
+                                lo, hi, self.available)
 
     def shard(self, s) -> WaveletMatrix:
         return _shard(self.shards, s)
@@ -231,33 +362,49 @@ class ShardedAnalytics:
                        ) -> jax.Array:
         """Global k-th smallest in [lo, hi). ``use_kernel`` routes (Q,)
         batches through the fused sharded Pallas descent (one launch per
-        query block, identical results)."""
+        query block, identical results); a degraded engine always takes
+        the XLA path."""
         if use_kernel:
             return sharded_range_quantile_fused(self.shards, self.shard_bits,
-                                                self.n, lo, hi, k)
+                                                self.n, lo, hi, k,
+                                                available=self.available)
         return sharded_range_quantile(self.shards, self.shard_bits, self.n,
-                                      lo, hi, k)
+                                      lo, hi, k, self.available)
 
     def range_count(self, lo, hi, sym_lo, sym_hi) -> jax.Array:
         return sharded_range_count(self.shards, self.shard_bits, self.n,
-                                   lo, hi, sym_lo, sym_hi)
+                                   lo, hi, sym_lo, sym_hi, self.available)
+
+    def range_count_bounds(self, lo, hi, sym_lo, sym_hi):
+        """(lower, upper, coverage) bracketing the full-corpus count —
+        the honest degraded-mode answer."""
+        return sharded_range_count_bounds(self.shards, self.shard_bits,
+                                          self.n, lo, hi, sym_lo, sym_hi,
+                                          self.available)
 
     def range_topk(self, lo, hi, k: int):
         return sharded_range_topk(self.shards, self.shard_bits, self.n,
-                                  lo, hi, k)
+                                  lo, hi, k, self.available)
 
     def range_topk_greedy(self, lo, hi, k: int, budget: int | None = None,
                           prune: bool = True):
         return sharded_range_topk_greedy(self.shards, self.shard_bits,
-                                         self.n, lo, hi, k, budget, prune)
+                                         self.n, lo, hi, k, budget, prune,
+                                         self.available)
 
     def range_distinct(self, lo, hi) -> jax.Array:
         return sharded_range_distinct(self.shards, self.shard_bits, self.n,
-                                      lo, hi)
+                                      lo, hi, self.available)
 
     def range_histogram(self, lo, hi) -> jax.Array:
         return sharded_range_histogram(self.shards, self.shard_bits, self.n,
-                                       lo, hi)
+                                       lo, hi, self.available)
+
+    def range_histogram_bounds(self, lo, hi):
+        """(hist_lower, uncovered, coverage): true per-symbol counts lie
+        in [hist_lower[c], hist_lower[c] + uncovered]."""
+        return sharded_range_histogram_bounds(self.shards, self.shard_bits,
+                                              self.n, lo, hi, self.available)
 
 
 def build_sharded_analytics(tokens, sigma: int, *, shard_bits: int = 16,

@@ -10,6 +10,11 @@ shape — builds a ``ShapeDtypeStruct`` target from it, and loads the
 arrays back into place. Round-trips are bit-exact (all leaves are integer
 arrays), so a restored engine answers every query identically to the one
 that was saved.
+
+Restores are integrity-verified (per-leaf crc32 from ``meta.json``) and
+self-healing: corrupted *derived* leaves are recomputed from the level
+bitmaps and re-checked against the recorded checksums; only primary
+bitmap corruption escapes as ``IntegrityError`` (rebuild from source).
 """
 from __future__ import annotations
 
@@ -106,12 +111,53 @@ def snapshot_meta(directory: str | Path,
 
 
 def load_analytics(directory: str | Path,
-                   step: Optional[int] = None) -> ShardedAnalytics:
-    """Restore a :func:`save_analytics` snapshot into a fresh engine."""
+                   step: Optional[int] = None,
+                   verify: bool = True,
+                   repair: bool = True) -> ShardedAnalytics:
+    """Restore a :func:`save_analytics` snapshot into a fresh engine.
+
+    The self-healing restore path: leaves are checksum-verified against
+    the ``leaf_crc32`` table in ``meta.json`` (``verify=True``); on a
+    mismatch confined to *derived* leaves (rank/select directories,
+    ``zeros``) the engine is repaired in place by recomputation from the
+    level bitmaps and re-verified against the recorded checksums — the
+    repaired engine is bit-identical to the one saved. Corruption of the
+    primary bitmaps themselves cannot be repaired from the snapshot;
+    ``IntegrityError`` escapes so the caller rebuilds from source
+    (``launch.analytics`` does exactly that).
+    """
+    from repro.robust.integrity import IntegrityError, tree_checksums
+    from repro.robust.repair import classify_bad_keys, repair_analytics
     meta = snapshot_meta(directory, step=step)
     target = shards_struct(meta["num_shards"], meta["sigma"],
                            1 << meta["shard_bits"], meta["sample_rate"])
-    shards, _ = restore_checkpoint(directory, target,
-                                   step=meta.get("step", _SNAPSHOT_STEP))
-    return ShardedAnalytics(shards=shards, n=meta["n"], sigma=meta["sigma"],
-                            shard_bits=meta["shard_bits"])
+    step = meta.get("step", _SNAPSHOT_STEP)
+
+    def make(shards):
+        return ShardedAnalytics(shards=shards, n=meta["n"],
+                                sigma=meta["sigma"],
+                                shard_bits=meta["shard_bits"])
+
+    try:
+        shards, _ = restore_checkpoint(directory, target, step=step,
+                                       verify=verify)
+        return make(shards)
+    except IntegrityError as err:
+        if not repair:
+            raise
+        derived, primary = classify_bad_keys(err.bad_keys)
+        if primary:
+            raise IntegrityError(
+                primary, where=f"{directory} (primary bitmaps corrupt — "
+                "repair impossible, rebuild from source)") from err
+        shards, _ = restore_checkpoint(directory, target, step=step,
+                                       verify=False)
+        engine = repair_analytics(make(shards))
+        want = meta.get("leaf_crc32", {})
+        got = tree_checksums(engine.shards)
+        still_bad = sorted(k for k in derived if got.get(k) != want.get(k))
+        if still_bad:
+            raise IntegrityError(
+                still_bad, where=f"{directory} (repair did not converge)"
+            ) from err
+        return engine

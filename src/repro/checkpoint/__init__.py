@@ -1,6 +1,6 @@
 """Fault-tolerance substrate: atomic checkpoints + elastic re-sharding."""
 from .checkpoint import (checkpoint_steps, latest_step, prune_checkpoints,
-                         restore_checkpoint, save_checkpoint)
+                         restore_checkpoint, save_checkpoint, step_dir_valid)
 
 __all__ = ["checkpoint_steps", "latest_step", "prune_checkpoints",
-           "restore_checkpoint", "save_checkpoint"]
+           "restore_checkpoint", "save_checkpoint", "step_dir_valid"]

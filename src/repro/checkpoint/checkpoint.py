@@ -12,6 +12,14 @@ restarts unchanged on 16×16 (or a 1-chip debug host). On a real multi-host
 cluster the same layout is produced per-host from
 ``fully_replicated_host_local_array``; the single-controller path here is
 the degenerate case.
+
+Integrity: every save records a per-leaf crc32 in ``meta.json``
+(``leaf_crc32`` — see ``robust.integrity``); ``restore_checkpoint``
+re-hashes what it read and raises ``IntegrityError`` naming the corrupted
+leaves (``verify=False`` opts out, e.g. to load a corrupt state for
+repair). ``latest_step`` only reports steps whose directory is structurally
+sound (meta.json parses, arrays.npz present and zip-readable), so a
+truncated or half-deleted step falls through to the newest valid one.
 """
 from __future__ import annotations
 
@@ -65,8 +73,10 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, state: Any,
     tmp.mkdir()
     arrays, dtypes = _flatten(state)
     np.savez(tmp / "arrays.npz", **arrays)
+    from repro.robust.integrity import checksum_flat
     meta = {"step": int(step), "num_arrays": len(arrays),
             "dtypes": dtypes,
+            "leaf_crc32": checksum_flat(arrays),
             "total_bytes": int(sum(a.nbytes for a in arrays.values()))}
     if extra_meta:
         meta.update(extra_meta)
@@ -78,14 +88,52 @@ def save_checkpoint(ckpt_dir: str | Path, step: int, state: Any,
     return final
 
 
-def checkpoint_steps(ckpt_dir: str | Path) -> list[int]:
+def step_dir_valid(d: Path, deep: bool = True) -> bool:
+    """Is a ``step_*`` directory a complete, readable checkpoint?
+
+    Missing ``arrays.npz``/``meta.json``, unparseable meta, or a
+    truncated/corrupt npz (broken zip central directory) all disqualify
+    it. ``deep=False`` skips opening the npz (listing-only callers).
+    """
+    if not (d / "meta.json").exists() or not (d / "arrays.npz").exists():
+        return False
+    try:
+        json.loads((d / "meta.json").read_text())
+    except (OSError, json.JSONDecodeError):
+        return False
+    if deep:
+        try:
+            with np.load(d / "arrays.npz") as z:
+                z.files
+        except Exception:
+            return False
+    return True
+
+
+def checkpoint_steps(ckpt_dir: str | Path, validate: bool = True) -> list[int]:
+    """Steps with a complete checkpoint directory, sorted ascending.
+
+    ``validate=True`` (default) screens out corrupt or partially-written
+    steps so ``latest_step`` — and therefore every ``step=None`` restore —
+    falls back to the newest *valid* step instead of crashing on a
+    truncated write.
+    """
     ckpt_dir = Path(ckpt_dir)
     if not ckpt_dir.exists():
         return []
     steps = []
     for p in ckpt_dir.iterdir():
-        if p.name.startswith("step_") and (p / "meta.json").exists():
-            steps.append(int(p.name[5:]))
+        if not p.name.startswith("step_"):
+            continue
+        try:
+            step = int(p.name[5:])
+        except ValueError:
+            continue
+        if validate and not step_dir_valid(p):
+            continue
+        if not validate and not (p / "meta.json").exists():
+            continue
+        steps.append(step)
     return sorted(steps)
 
 
@@ -102,11 +150,17 @@ def prune_checkpoints(ckpt_dir: str | Path, keep: int) -> None:
 
 def restore_checkpoint(ckpt_dir: str | Path, target: Any,
                        step: Optional[int] = None,
-                       shardings: Any = None) -> tuple[Any, dict]:
+                       shardings: Any = None,
+                       verify: bool = True) -> tuple[Any, dict]:
     """Restore into the structure of ``target`` (a pytree of arrays or
     ShapeDtypeStructs). ``shardings``, if given, is a matching pytree of
     ``jax.sharding.Sharding`` — each leaf is placed directly onto the new
-    mesh (elastic re-sharding). Returns (state, meta)."""
+    mesh (elastic re-sharding). Returns (state, meta).
+
+    ``verify=True`` (default) re-hashes every stored leaf against the
+    ``leaf_crc32`` table recorded at save time (when present) and raises
+    ``robust.integrity.IntegrityError`` naming the corrupted leaves.
+    Pass ``verify=False`` to load a known-corrupt state for repair."""
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
@@ -115,12 +169,17 @@ def restore_checkpoint(ckpt_dir: str | Path, target: Any,
     meta = json.loads((d / "meta.json").read_text())
     saved_dtypes = meta.get("dtypes", {})
     with np.load(d / "arrays.npz") as z:
-        stored = {}
-        for k in z.files:
-            arr = z[k]
-            if arr.dtype.kind == "V" and k in saved_dtypes:
-                arr = arr.view(np.dtype(saved_dtypes[k]))
-            stored[k] = arr
+        raw = {k: z[k] for k in z.files}
+    if verify and meta.get("leaf_crc32"):
+        from repro.robust.integrity import IntegrityError, verify_flat
+        bad = verify_flat(raw, meta["leaf_crc32"])
+        if bad:
+            raise IntegrityError(bad, where=str(d))
+    stored = {}
+    for k, arr in raw.items():
+        if arr.dtype.kind == "V" and k in saved_dtypes:
+            arr = arr.view(np.dtype(saved_dtypes[k]))
+        stored[k] = arr
 
     paths, treedef = jax.tree_util.tree_flatten_with_path(target)
     shard_leaves = (jax.tree_util.tree_flatten(

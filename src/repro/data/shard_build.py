@@ -28,7 +28,8 @@ import jax.numpy as jnp
 
 def build_shards_stacked(build_one: Callable, shards: jax.Array, *,
                          parallel: str | bool = "auto",
-                         jit_loop: bool = False):
+                         jit_loop: bool = False,
+                         retries: int = 0, backoff_s: float = 0.05):
     """Build one pytree per shard row and stack them leaf-wise.
 
     ``shards``: (num_shards, shard_size) array (any integer dtype).
@@ -41,7 +42,19 @@ def build_shards_stacked(build_one: Callable, shards: jax.Array, *,
     dispatching op-by-op (all shards share one static shape). Leave it off
     for builders that exploit concrete values in loop mode (e.g. the
     suffix-array doubling early exit).
+
+    ``retries > 0`` wraps the whole build in bounded retry with
+    exponential backoff (``robust.faults.with_retry``) — the
+    rebuild-from-source escalation path uses this so a transiently failing
+    device doesn't turn a repairable incident into an outage.
     """
+    if retries > 0:
+        from repro.robust.faults import with_retry
+        return with_retry(
+            lambda: build_shards_stacked(build_one, shards,
+                                         parallel=parallel,
+                                         jit_loop=jit_loop, retries=0),
+            retries=retries, backoff_s=backoff_s)
     shards = jnp.asarray(shards)
     num_shards = shards.shape[0]
     ndev = jax.local_device_count()

@@ -22,6 +22,7 @@ within-shard positions only — seam hits are count-only for now (ROADMAP).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 
 import jax
@@ -51,6 +52,11 @@ class ShardedTextIndex:
     sigma: int = field(metadata=dict(static=True))   # raw vocab size
     shard_bits: int = field(metadata=dict(static=True))
     seam_overlap: int = field(metadata=dict(static=True))
+    #: (S,) bool per-shard availability, or None for full availability.
+    #: Degraded mode: unavailable shards contribute 0 within-shard matches,
+    #: seams touching them are skipped, and their locate hits are masked —
+    #: ``coverage()`` / ``count_bounds`` report how much corpus is served.
+    available: jax.Array | None = None
 
     @property
     def shard_size(self) -> int:
@@ -59,6 +65,42 @@ class ShardedTextIndex:
     @property
     def num_shards(self) -> int:
         return jax.tree.leaves(self.shards)[0].shape[0]
+
+    @property
+    def degraded(self) -> bool:
+        return self.available is not None
+
+    # ---- availability management -------------------------------------
+    def with_availability(self, available) -> "ShardedTextIndex":
+        """Index serving only the shards where ``available`` is True
+        (``None`` restores full availability)."""
+        if available is not None:
+            available = jnp.asarray(available, bool)
+            if available.shape != (self.num_shards,):
+                raise ValueError(
+                    f"availability mask shape {available.shape} != "
+                    f"({self.num_shards},)")
+        return dataclasses.replace(self, available=available)
+
+    def drop_shards(self, shard_ids) -> "ShardedTextIndex":
+        """Mark the given shard indices unavailable (cumulative)."""
+        mask = (jnp.ones((self.num_shards,), bool)
+                if self.available is None else self.available)
+        mask = mask.at[jnp.asarray(shard_ids, _I32)].set(False)
+        return dataclasses.replace(self, available=mask)
+
+    def _shard_sizes(self) -> jax.Array:
+        """(S,) true (unpadded) token count of each shard."""
+        starts = jnp.arange(self.num_shards, dtype=_I32) << self.shard_bits
+        return jnp.clip(jnp.asarray(self.n, _I32) - starts, 0,
+                        self.shard_size)
+
+    def coverage(self) -> jax.Array:
+        """Fraction of corpus positions on available shards (float32)."""
+        if self.available is None:
+            return jnp.float32(1.0)
+        covered = jnp.sum(jnp.where(self.available, self._shard_sizes(), 0))
+        return covered.astype(jnp.float32) / jnp.float32(max(1, self.n))
 
     def shard(self, s: jax.Array) -> FMIndex:
         return jax.tree.map(lambda l: l[s], self.shards)
@@ -93,10 +135,32 @@ class ShardedTextIndex:
     def count(self, patterns: jax.Array, lengths: jax.Array) -> jax.Array:
         """Total matches per pattern, (B,) int32 — within-shard matches
         from the FM-indexes plus boundary-crossing matches from the seam
-        windows. Exact for lengths ≤ min(seam_overlap + 1, shard_size)."""
+        windows. Exact for lengths ≤ min(seam_overlap + 1, shard_size).
+        On a degraded index this counts surviving shards only (a lower
+        bound on the true count — ``count_bounds`` brackets it)."""
         patterns = jnp.atleast_2d(jnp.asarray(patterns, _I32))
         within = jnp.sum(self.count_by_shard(patterns, lengths), axis=0)
         return within + self._seam_count(*self._sanitize(patterns, lengths))
+
+    def count_bounds(self, patterns: jax.Array, lengths: jax.Array):
+        """(lower, upper, coverage) bracketing the full-corpus count.
+
+        ``lower`` is the degraded ``count``. Every missed match either
+        starts on an unavailable shard (≤ its position count) or crosses
+        a skipped seam (≤ length−1 starts per seam), so
+        ``upper = lower + unavailable_positions + skipped_seams·(len−1)``.
+        Fully-available indexes return lower == upper, coverage 1.0.
+        """
+        lower = self.count(patterns, lengths)
+        if self.available is None:
+            return lower, lower, jnp.float32(1.0)
+        uncovered = jnp.sum(
+            jnp.where(self.available, 0, self._shard_sizes()))
+        seam_ok = self.available[:-1] & self.available[1:]
+        skipped = jnp.sum(~seam_ok).astype(_I32)
+        lengths = jnp.atleast_1d(jnp.asarray(lengths, _I32))
+        extra = uncovered + skipped * jnp.maximum(lengths - 1, 0)
+        return lower, lower + extra, self.coverage()
 
     def _seam_count(self, patterns: jax.Array,
                     lengths: jax.Array) -> jax.Array:
@@ -127,18 +191,26 @@ class ShardedTextIndex:
         ol = o[None, :] + lengths[:, None]                      # (B, O)
         span = ((o[None, :] < ov) & (ol > ov) & (ol <= width)
                 & (lengths[:, None] <= lmax))[:, None, :]
-        return jnp.sum(hit & span, axis=(1, 2)).astype(_I32)
+        crossing = hit & span
+        if self.available is not None:
+            # seam s spans shards s and s+1 — both must be available
+            seam_ok = self.available[:-1] & self.available[1:]
+            crossing = crossing & seam_ok[None, :, None]
+        return jnp.sum(crossing, axis=(1, 2)).astype(_I32)
 
     def count_by_shard(self, patterns: jax.Array,
                        lengths: jax.Array) -> jax.Array:
         """(S, B) per-shard match counts (distribution analytics).
 
         One vmap over the stacked shard axis of the per-shard batched
-        backward search.
+        backward search. Unavailable shards report 0.
         """
         patterns, lengths = self._sanitize(patterns, lengths)
-        return jax.vmap(lambda fm: fm_count(fm, patterns, lengths))(
+        per = jax.vmap(lambda fm: fm_count(fm, patterns, lengths))(
             self.shards)
+        if self.available is not None:
+            per = jnp.where(self.available[:, None], per, 0)
+        return per
 
     def locate(self, patterns: jax.Array, lengths: jax.Array,
                max_hits_per_shard: int = 8) -> jax.Array:
@@ -151,15 +223,17 @@ class ShardedTextIndex:
         patterns, lengths = self._sanitize(patterns, lengths)
         S = self.num_shards
 
-        def per_shard(fm, base):
+        def per_shard(fm, base, ok):
             def one(p, l):
                 local = fm_locate(fm, p, l, max_hits_per_shard)
-                return jnp.where(local >= 0, local + base,
+                return jnp.where(ok & (local >= 0), local + base,
                                  jnp.asarray(-1, _I32))
             return jax.vmap(one)(patterns, lengths)        # (B, H)
 
         bases = jnp.arange(S, dtype=_I32) << self.shard_bits
-        hits = jax.vmap(per_shard)(self.shards, bases)     # (S, B, H)
+        ok = (jnp.ones((S,), bool) if self.available is None
+              else jnp.asarray(self.available, bool))
+        hits = jax.vmap(per_shard)(self.shards, bases, ok)  # (S, B, H)
         flat = jnp.transpose(hits, (1, 0, 2)).reshape(patterns.shape[0], -1)
         big = jnp.where(flat < 0, jnp.asarray(jnp.iinfo(jnp.int32).max,
                                               _I32), flat)

@@ -87,6 +87,8 @@ def main():
                    meta.get("corpus_seed"))
             want = (args.n, args.vocab, args.shard_bits, args.seed)
             if got == want:
+                # verified restore; derived-leaf corruption is repaired
+                # in place, primary corruption raises → rebuild below
                 eng = load_analytics(args.snapshot_dir)
                 restored = True
             else:
@@ -99,9 +101,20 @@ def main():
             # overwrite someone else's data with our snapshot
             print(f"ignoring --snapshot-dir: {e}")
             save_snapshot = False
+        except Exception as e:
+            # unusable snapshot (unrepairable corruption, torn write,
+            # missing leaves, …): warn and rebuild from source — a bad
+            # snapshot must never take serving down
+            print(f"WARNING: snapshot restore failed ({type(e).__name__}: "
+                  f"{e}) — rebuilding from source")
     if not restored:
-        eng = build_sharded_analytics(toks, args.vocab,
-                                      shard_bits=args.shard_bits)
+        from repro.robust import with_retry
+        eng = with_retry(
+            lambda: build_sharded_analytics(toks, args.vocab,
+                                            shard_bits=args.shard_bits),
+            retries=2, backoff_s=0.1,
+            on_retry=lambda a, e: print(
+                f"build attempt {a + 1} failed ({e}) — retrying"))
     jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
     t_build = time.perf_counter() - t0
     verb = "restore" if restored else "build"

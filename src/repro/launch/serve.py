@@ -2,6 +2,11 @@
 
 PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
     --batch 4 --prompt-len 64 --decode-steps 32
+
+``--ckpt-dir`` restores params from an integrity-verified checkpoint
+(first run saves one). Model weights are not derivable from anything, so
+a failed verification cannot be repaired — the CLI warns and falls back
+to fresh init rather than serving silently corrupted weights.
 """
 from __future__ import annotations
 
@@ -17,6 +22,32 @@ from repro.data import make_corpus
 from repro.models.model import build_model, zero_cache
 
 
+def _params_with_checkpoint(model, seed: int, ckpt_dir: str | None):
+    """Fresh-init params, replaced by a verified checkpoint restore when
+    ``ckpt_dir`` holds one. Any restore failure — corruption, torn write,
+    structure mismatch — warns and serves the fresh init; an empty
+    directory is seeded with a checkpoint for the next run."""
+    params = model.init(seed)
+    if not ckpt_dir:
+        return params, "init"
+    from repro.checkpoint import (latest_step, restore_checkpoint,
+                                  save_checkpoint)
+    if latest_step(ckpt_dir) is None:
+        save_checkpoint(ckpt_dir, 0, params,
+                        extra_meta={"kind": "serve_params", "seed": seed})
+        return params, "init (checkpoint saved)"
+    try:
+        restored, meta = restore_checkpoint(ckpt_dir, params)
+        if meta.get("kind") not in (None, "serve_params"):
+            raise ValueError(f"not a serve checkpoint "
+                             f"(kind={meta.get('kind')!r})")
+        return restored, "restore (verified)"
+    except Exception as e:
+        print(f"WARNING: checkpoint restore failed ({type(e).__name__}: "
+              f"{e}) — serving fresh init")
+        return params, "init (restore failed)"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_0_5b")
@@ -27,12 +58,16 @@ def main():
     ap.add_argument("--max-seq", type=int, default=0,
                     help="cache length (default prompt+decode)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--ckpt-dir", type=str, default=None,
+                    help="params checkpoint: verified restore when "
+                         "present, fresh init (saved here) otherwise")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
-    params = model.init(args.seed)
+    params, origin = _params_with_checkpoint(model, args.seed, args.ckpt_dir)
+    print(f"params: {origin}")
     b = args.batch
     max_seq = args.max_seq or (args.prompt_len + args.decode_steps)
 

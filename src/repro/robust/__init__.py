@@ -1,0 +1,48 @@
+"""Fault-tolerance subsystem: integrity-verified, self-healing serving.
+
+The paper's redundancy — every rank/select directory, select sample,
+zero count, C table, and SA-sample directory is derivable from the
+underlying bitmaps — turned into an operational property:
+
+* ``integrity`` — per-leaf crc32 recorded in every snapshot's
+  ``meta.json`` and re-verified on restore (``IntegrityError`` names the
+  corrupted leaves).
+* ``verify``    — structural self-checks that recompute each derived
+  structure from the bitmaps and classify violations as repairable
+  (derived) vs rebuild-needed (primary).
+* ``repair``    — recomputation of corrupted derived leaves through the
+  original builders: a successful repair is bit-identical to the
+  pre-fault engine.
+* ``faults``    — seedable chaos harness (leaf bit-flips, snapshot
+  truncation/deletion, stale partial writes) + bounded retry/backoff.
+
+Degraded-mode serving (per-shard availability masks, coverage-reported
+answers) lives on the engines themselves — ``analytics.engine`` and
+``index.sharded``.
+"""
+from .faults import (corrupt_snapshot_leaf, delete_file, delete_step,
+                     flip_leaf_bit, inject_partial_tmp, truncate_file,
+                     with_retry)
+from .integrity import (IntegrityError, checksum_array, checksum_flat,
+                        tree_checksums, trees_identical, verify_flat)
+from .repair import (classify_bad_keys, is_primary_key, repair_analytics,
+                     repair_fm_index, repair_sharded_index,
+                     repair_wavelet_matrix, repair_wavelet_tree)
+from .verify import (VerifyReport, Violation, verify_analytics,
+                     verify_binary_rank, verify_binary_select,
+                     verify_bitvector, verify_fm_index,
+                     verify_sharded_index, verify_wavelet_matrix,
+                     verify_wavelet_tree)
+
+__all__ = [
+    "IntegrityError", "checksum_array", "checksum_flat", "tree_checksums",
+    "trees_identical", "verify_flat",
+    "VerifyReport", "Violation", "verify_analytics", "verify_binary_rank",
+    "verify_binary_select", "verify_bitvector", "verify_fm_index",
+    "verify_sharded_index", "verify_wavelet_matrix", "verify_wavelet_tree",
+    "classify_bad_keys", "is_primary_key", "repair_analytics",
+    "repair_fm_index", "repair_sharded_index", "repair_wavelet_matrix",
+    "repair_wavelet_tree",
+    "corrupt_snapshot_leaf", "delete_file", "delete_step", "flip_leaf_bit",
+    "inject_partial_tmp", "truncate_file", "with_retry",
+]

@@ -1,0 +1,189 @@
+"""Seedable fault injection + bounded retry — the chaos harness.
+
+Two fault surfaces, matching how corruption reaches a serving engine:
+
+* **In-memory / stored-leaf faults** — flip bits in chosen pytree leaves,
+  either on a live engine (``flip_leaf_bit``) or inside a snapshot's
+  ``arrays.npz`` (``corrupt_snapshot_leaf`` rewrites the member so the
+  zip container stays readable and only the *leaf checksum* catches it —
+  the exact failure mode of silent disk/RAM corruption).
+* **File-level faults** — truncate or delete snapshot files and plant
+  stale ``.tmp`` partial writes (``truncate_file`` / ``delete_file`` /
+  ``inject_partial_tmp``), the crash-mid-write failure modes
+  ``checkpoint.latest_step`` must skip over.
+
+Everything takes an explicit seed; tests and the ``launch.chaos`` CLI
+replay identical fault sequences. ``with_retry`` is the bounded
+retry/backoff wrapper the restore → rebuild escalation uses around shard
+builds.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _norm(key: str) -> str:
+    """Match-friendly leaf path: attribute tokens stringify as ``.name``
+    (GetAttrKey), so strip the dots — ``leaf_match="rank/words"`` then
+    matches the stored key ``".bitvectors/.rank/.words"``."""
+    return key.replace(".", "")
+
+
+def _flat_with_keys(tree: Any):
+    """[(path, leaf)] with checkpoint-style '/'-joined path keys."""
+    from repro.checkpoint.checkpoint import _path_token
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_SEP.join(_path_token(p) for p in path), leaf)
+            for path, leaf in flat]
+
+
+def leaf_keys(tree: Any) -> list:
+    return [k for k, _ in _flat_with_keys(tree)]
+
+
+def _flip_bit_in_array(arr: np.ndarray, rng: np.random.Generator
+                       ) -> Tuple[np.ndarray, str]:
+    """Flip one random bit of one random element; returns (copy, where)."""
+    a = np.ascontiguousarray(np.asarray(arr)).copy()
+    if a.size == 0:
+        return a, "empty leaf (no-op)"
+    view = a.view(np.uint8).reshape(-1)
+    byte = int(rng.integers(0, view.size))
+    bit = int(rng.integers(0, 8))
+    view[byte] ^= np.uint8(1 << bit)
+    return a, f"byte {byte} bit {bit} of {a.size}×{a.dtype} leaf"
+
+
+def flip_leaf_bit(tree: Any, *, seed: int,
+                  leaf_match: Optional[str] = None) -> Tuple[Any, str]:
+    """Return a copy of ``tree`` with one bit flipped in one leaf.
+
+    ``leaf_match`` restricts the choice to leaves whose '/'-joined path
+    contains the substring (e.g. ``"rank/superblock"``); ``None`` picks
+    any leaf. Returns ``(corrupted_tree, description)`` where the
+    description names the leaf path — tests use it to assert detection
+    localizes correctly.
+    """
+    rng = np.random.default_rng(seed)
+    flat = _flat_with_keys(tree)
+    candidates = [i for i, (k, leaf) in enumerate(flat)
+                  if (leaf_match is None or _norm(leaf_match) in _norm(k))
+                  and np.asarray(leaf).size > 0]
+    if not candidates:
+        raise ValueError(f"no leaf matches {leaf_match!r}")
+    pick = candidates[int(rng.integers(0, len(candidates)))]
+    key = flat[pick][0]
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    new_leaf, where = _flip_bit_in_array(leaves[pick], rng)
+    leaves = list(leaves)
+    leaves[pick] = jax.numpy.asarray(new_leaf)
+    return (jax.tree_util.tree_unflatten(treedef, leaves),
+            f"{key}: {where}")
+
+
+# --------------------------------------------------------------------------
+# snapshot-file faults
+# --------------------------------------------------------------------------
+
+def _latest_step_dir(ckpt_dir: str | Path) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(p for p in ckpt_dir.iterdir()
+                   if p.is_dir() and p.name.startswith("step_"))
+    if not steps:
+        raise FileNotFoundError(f"no step_* under {ckpt_dir}")
+    return steps[-1]
+
+
+def corrupt_snapshot_leaf(ckpt_dir: str | Path, *, seed: int,
+                          leaf_match: Optional[str] = None) -> str:
+    """Flip one bit of one stored leaf inside ``arrays.npz``, rewriting
+    the archive so the zip container stays valid — only the per-leaf
+    crc32 in ``meta.json`` can catch it (silent-corruption model)."""
+    d = _latest_step_dir(ckpt_dir)
+    rng = np.random.default_rng(seed)
+    with np.load(d / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+    keys = [k for k in arrays
+            if (leaf_match is None or _norm(leaf_match) in _norm(k))
+            and arrays[k].size]
+    if not keys:
+        raise ValueError(f"no stored leaf matches {leaf_match!r}")
+    key = keys[int(rng.integers(0, len(keys)))]
+    arrays[key], where = _flip_bit_in_array(arrays[key], rng)
+    np.savez(d / "arrays.npz", **arrays)
+    return f"{key}: {where}"
+
+
+def truncate_file(ckpt_dir: str | Path, name: str = "arrays.npz",
+                  keep_frac: float = 0.5) -> Path:
+    """Truncate a snapshot file to ``keep_frac`` of its size (torn write)."""
+    d = _latest_step_dir(ckpt_dir)
+    path = d / name
+    size = path.stat().st_size
+    with open(path, "r+b") as f:
+        f.truncate(max(1, int(size * keep_frac)))
+    return path
+
+
+def delete_file(ckpt_dir: str | Path, name: str = "meta.json") -> Path:
+    """Delete one file of the newest snapshot step (half-deleted dir)."""
+    d = _latest_step_dir(ckpt_dir)
+    (d / name).unlink()
+    return d / name
+
+
+def delete_step(ckpt_dir: str | Path) -> Path:
+    """Remove the newest step directory entirely."""
+    d = _latest_step_dir(ckpt_dir)
+    shutil.rmtree(d)
+    return d
+
+
+def inject_partial_tmp(ckpt_dir: str | Path, step: int = 99) -> Path:
+    """Plant a stale ``.tmp_step_*`` partial write (writer died pre-publish)
+    plus a bare ``step_*`` directory missing its arrays — both must be
+    invisible to ``latest_step``."""
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f".tmp_step_{step:08d}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    (tmp / "arrays.npz").write_bytes(b"PK\x03\x04 torn")
+    bare = ckpt_dir / f"step_{step:08d}"
+    bare.mkdir(exist_ok=True)
+    (bare / "meta.json").write_text(json.dumps({"step": step}))
+    return tmp
+
+
+# --------------------------------------------------------------------------
+# bounded retry / backoff
+# --------------------------------------------------------------------------
+
+def with_retry(fn: Callable, *, retries: int = 2, backoff_s: float = 0.05,
+               exceptions: Sequence[type] = (Exception,),
+               on_retry: Optional[Callable[[int, BaseException], None]]
+               = None):
+    """Call ``fn()`` with up to ``retries`` re-attempts and exponential
+    backoff (backoff_s · 2^attempt between tries). Re-raises the last
+    exception once the budget is spent. ``on_retry(attempt, exc)`` is
+    invoked before each sleep — callers log through it.
+    """
+    last: BaseException | None = None
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except tuple(exceptions) as e:          # noqa: PERF203
+            last = e
+            if attempt == retries:
+                raise
+            if on_retry is not None:
+                on_retry(attempt, e)
+            time.sleep(backoff_s * (2 ** attempt))
+    raise last  # unreachable; keeps type checkers honest

@@ -1,0 +1,227 @@
+"""Repair of corrupted *derived* structures by recomputation.
+
+The flip side of ``robust.verify``: because every rank/select directory,
+zero count, C table, and SA-sample directory is a deterministic function
+of the level bitmaps (paper Theorems 5.1/5.2), a corrupted derived leaf
+is repaired by recomputing it through the exact same builders the
+original construction used — so a successful repair is *bit-identical*
+to the pre-fault structure, not merely equivalent. Only corruption of
+the primary bitmaps (``rank.words`` of a wavelet-matrix level, seam
+windows) forces a shard rebuild from source tokens.
+
+Leaf classification for checksum-failure triage lives here too:
+``classify_bad_keys`` maps the '/'-joined pytree paths that
+``IntegrityError`` reports onto derived-vs-primary, deciding repair vs
+rebuild without any structural scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitops
+from repro.core.rank_select import build_bitvector_levels
+from repro.core.wavelet_matrix import WaveletMatrix
+
+_I32 = jnp.int32
+
+
+# --------------------------------------------------------------------------
+# checksum-failure triage
+# --------------------------------------------------------------------------
+
+#: path fragments of primary leaves — everything else in the serving
+#: pytrees is derivable from the bitmaps. ``mark/words`` is *derived*
+#: (recomputable from the SA-sample walk), so the wm bitmap rule matches
+#: on the bitvectors prefix, not bare "words".
+_PRIMARY_FRAGMENTS = ("bitvectors/rank/words", "seam_windows")
+
+
+def is_primary_key(key: str) -> bool:
+    """Does this flattened-pytree path name primary (non-derivable) data?
+
+    Keys are matched dot-stripped: attribute path tokens stringify as
+    ``.name``, so the stored form of the wm bitmap leaf is
+    ``".bitvectors/.rank/.words"``.
+    """
+    key = key.replace(".", "")
+    return any(frag in key for frag in _PRIMARY_FRAGMENTS)
+
+
+def classify_bad_keys(bad_keys: Iterable[str]) -> Tuple[list, list]:
+    """Split checksum-failed leaf paths into (derived, primary)."""
+    derived, primary = [], []
+    for k in bad_keys:
+        (primary if is_primary_key(k) else derived).append(k)
+    return derived, primary
+
+
+# --------------------------------------------------------------------------
+# wavelet matrix / analytics engine
+# --------------------------------------------------------------------------
+
+def repair_wavelet_matrix(wm: WaveletMatrix) -> WaveletMatrix:
+    """Recompute every derived leaf of one matrix from its level bitmaps.
+
+    Rank superblock/block tables, both select sample directories, and the
+    per-level ``zeros`` are rebuilt with the same batched
+    ``build_bitvector_levels`` the fused construction uses — bit-identical
+    output when the bitmaps are intact.
+    """
+    words = wm.bitvectors.rank.words                    # (nbits, W)
+    sample_rate = wm.bitvectors.sel1.sample_rate
+    bv = build_bitvector_levels(words, wm.n, sample_rate, use_kernels=False)
+    ones = jax.vmap(lambda w: jnp.sum(bitops.popcount(w), dtype=_I32))(words)
+    zeros = (jnp.asarray(wm.n, _I32) - ones).astype(_I32)
+    return WaveletMatrix(bitvectors=bv, zeros=zeros, n=wm.n, nbits=wm.nbits)
+
+
+def repair_analytics(engine):
+    """Repair all shards of a ``ShardedAnalytics`` (stacked (S,) leaves).
+
+    One vmap over the shard axis of the per-matrix repair; geometry and
+    the availability mask pass through unchanged.
+    """
+    shards = engine.shards
+    n, nbits = shards.n, shards.nbits
+    sample_rate = shards.bitvectors.sel1.sample_rate
+    words = shards.bitvectors.rank.words                # (S, nbits, W)
+
+    def one(w):
+        bv = build_bitvector_levels(w, n, sample_rate, use_kernels=False)
+        ones = jax.vmap(lambda ww: jnp.sum(bitops.popcount(ww),
+                                           dtype=_I32))(w)
+        return bv, (jnp.asarray(n, _I32) - ones).astype(_I32)
+
+    bv, zeros = jax.vmap(one)(words)
+    fixed = WaveletMatrix(bitvectors=bv, zeros=zeros, n=n, nbits=nbits)
+    return dataclasses.replace(engine, shards=fixed)
+
+
+# --------------------------------------------------------------------------
+# FM-index (full-text shards)
+# --------------------------------------------------------------------------
+
+def _rebuild_sa_directories(wm: WaveletMatrix, C: jax.Array, m: int,
+                            sample_rate: int):
+    """Recompute the sampled-SA directories from the BWT bitmaps alone.
+
+    The suffix array is itself derivable from the FM-index: walking LF
+    from row 0 (the sentinel suffix, text position m−1) visits the rows
+    of positions m−1, m−2, …, 0 in order. One O(m)-step sequential walk
+    (each step an access + rank) recovers, for every sampled position
+    i·rate, the row that holds it — exactly the information
+    ``build_fm_index`` takes from the explicit SA. Worst-case repair
+    cost, reserved for corrupt ``mark``/``sa_sample`` leaves.
+    """
+    from repro.core.wavelet_matrix import wm_access, wm_rank
+    num = (m + sample_rate - 1) // sample_rate
+
+    def lf(j):
+        c = wm_access(wm, j)
+        return C[c] + wm_rank(wm, c, j)
+
+    def body(t, state):
+        row, rows = state
+        pos = m - 1 - t
+        slot = jnp.where(pos % sample_rate == 0, pos // sample_rate, num)
+        rows = rows.at[slot].set(row, mode="drop")
+        return lf(row), rows
+
+    _, rows = jax.lax.fori_loop(
+        0, m, body, (jnp.zeros((), _I32), jnp.zeros((num,), _I32)))
+    # rows[i] = SA row holding text position i·rate → mark bitmap + the
+    # row-order compaction build_fm_index produces
+    marked = jnp.zeros((m,), jnp.uint8).at[rows].set(1)
+    words = bitops.pack_bits(bitops.pad_bits(marked))
+    cnt = jnp.cumsum(marked.astype(_I32)) - 1             # rank among marked
+    sa_sample = jnp.zeros((num,), _I32).at[cnt[rows]].set(
+        jnp.arange(num, dtype=_I32) * sample_rate)
+    from repro.core.rank_select import build_binary_rank
+    return build_binary_rank(words, m), sa_sample
+
+
+def repair_fm_index(fm, deep: bool = True):
+    """Recompute every derived leaf of one ``FMIndex`` from its bitmaps.
+
+    Always rebuilds the wavelet-matrix directories and the C table (cheap,
+    vectorized). ``deep=True`` additionally re-derives the sampled-SA
+    directories via the O(m) LF walk — needed only when ``mark`` /
+    ``sa_sample`` are suspect, so callers triaging a localized checksum
+    failure can skip it.
+    """
+    from repro.core.wavelet_matrix import wm_rank
+    from repro.index.fm_index import FMIndex
+    wm = repair_wavelet_matrix(fm.wm)
+    m = fm.m
+    # C from the bitmap-encoded symbol histogram: count of symbol c is
+    # wm_rank(c, m); exclusive-cumsum via the (σ+2,) boundary layout
+    sigma_work = fm.sigma + 1
+    counts = wm_rank(wm, jnp.arange(sigma_work, dtype=_I32),
+                     jnp.full((sigma_work,), m, _I32))
+    C = jnp.concatenate([jnp.zeros((1,), _I32),
+                         jnp.cumsum(counts).astype(_I32)])
+    if deep:
+        mark, sa_sample = _rebuild_sa_directories(wm, C, m, fm.sample_rate)
+    else:
+        mark, sa_sample = fm.mark, fm.sa_sample
+    return FMIndex(wm=wm, C=C, mark=mark, sa_sample=sa_sample, n=fm.n,
+                   sigma=fm.sigma, sample_rate=fm.sample_rate)
+
+
+def repair_sharded_index(idx, deep: bool = True):
+    """Repair all shards of a ``ShardedTextIndex`` (seam windows are
+    primary and pass through untouched)."""
+    S = idx.num_shards
+    fixed = [repair_fm_index(jax.tree.map(lambda l: l[s], idx.shards),
+                             deep=deep)
+             for s in range(S)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *fixed)
+    return dataclasses.replace(idx, shards=stacked)
+
+
+# --------------------------------------------------------------------------
+# wavelet tree
+# --------------------------------------------------------------------------
+
+def repair_wavelet_tree(wt):
+    """Recompute a ``WaveletTree``'s directories and ``node_starts`` from
+    its level bitmaps.
+
+    ``node_starts`` row l+1 follows from row l and the per-node zero
+    counts of level l's bitmap (each node splits into its zero/one
+    children); row 0 is [0, …]. The leaf row (the C array) falls out of
+    the final split. Host numpy — repair is an incident path.
+    """
+    from repro.core.wavelet_tree import WaveletTree
+    words = np.asarray(wt.bitvectors.rank.words)        # (nbits, W)
+    n, nbits = wt.n, wt.nbits
+    size = 1 << nbits
+    starts = np.zeros((nbits + 1, size), np.int64)
+    row = np.zeros(1, np.int64)                          # starts of 2^l nodes
+    bits_cache = [np.unpackbits(np.ascontiguousarray(words[l])
+                                .view(np.uint8), bitorder="little")[:n]
+                  for l in range(nbits)]
+    for l in range(nbits):
+        starts[l, :row.shape[0]] = row   # tail stays 0 (builder's padding)
+        bits = bits_cache[l]
+        bounds = np.concatenate([row, [n]])
+        ones_pref = np.concatenate([[0], np.cumsum(bits)])
+        child = np.empty(row.shape[0] * 2, np.int64)
+        for v in range(row.shape[0]):
+            a, b = bounds[v], bounds[v + 1]
+            z = (b - a) - (ones_pref[b] - ones_pref[a])
+            child[2 * v] = a
+            child[2 * v + 1] = a + z
+        row = child
+    starts[nbits, :row.shape[0]] = row
+    sample_rate = wt.bitvectors.sel1.sample_rate
+    bv = build_bitvector_levels(jnp.asarray(words), n, sample_rate,
+                                use_kernels=False)
+    return WaveletTree(bitvectors=bv,
+                       node_starts=jnp.asarray(starts, _I32),
+                       n=n, nbits=nbits)

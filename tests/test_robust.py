@@ -1,0 +1,391 @@
+"""Corruption round-trip suite for the fault-tolerance subsystem.
+
+Every fault class must be *detected* and then either *repaired
+bit-identically* (derived structures recompute from the bitmaps) or
+*served degraded* with an explicit coverage report — never a silent
+wrong answer, never an unhandled crash.
+"""
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics import (build_sharded_analytics, load_analytics,
+                             save_analytics)
+from repro.checkpoint import (latest_step, restore_checkpoint,
+                              save_checkpoint, step_dir_valid)
+from repro.index import build_sharded_index
+from repro.robust import (IntegrityError, checksum_array,
+                          classify_bad_keys, corrupt_snapshot_leaf,
+                          delete_file, flip_leaf_bit, inject_partial_tmp,
+                          is_primary_key, repair_analytics,
+                          repair_fm_index, repair_sharded_index,
+                          repair_wavelet_tree, tree_checksums,
+                          trees_identical, truncate_file, verify_analytics,
+                          verify_fm_index, verify_sharded_index,
+                          verify_wavelet_matrix, verify_wavelet_tree,
+                          with_retry)
+
+N, SIGMA, SHARD_BITS = 3000, 97, 10
+
+
+@pytest.fixture(scope="module")
+def corpus_engine():
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, SIGMA, N).astype(np.int64)
+    return toks, build_sharded_analytics(toks, SIGMA,
+                                         shard_bits=SHARD_BITS)
+
+
+@pytest.fixture(scope="module")
+def text_index():
+    rng = np.random.default_rng(1)
+    n, vocab = 1024, 64
+    toks = rng.integers(0, vocab, n).astype(np.int64)
+    idx = build_sharded_index(toks, vocab, shard_bits=9, sample_rate=32,
+                              seam_overlap=7)
+    return toks, idx
+
+
+def _snap(eng, directory) -> Path:
+    return save_analytics(eng, directory, extra_meta={"corpus_seed": 0})
+
+
+# ---------------------------------------------------------------------------
+# integrity: checksums recorded, verified, localized
+# ---------------------------------------------------------------------------
+
+def test_checksums_recorded_in_meta(corpus_engine, tmp_path):
+    _, eng = corpus_engine
+    step_dir = _snap(eng, tmp_path)
+    meta = json.loads((step_dir / "meta.json").read_text())
+    crc = meta["leaf_crc32"]
+    with np.load(step_dir / "arrays.npz") as z:
+        stored = set(z.files)
+    assert set(crc) == stored and stored
+    assert all(len(v) == 8 for v in crc.values())
+
+
+def test_checksum_tags_shape_and_dtype():
+    a = np.arange(8, dtype=np.int32)
+    assert checksum_array(a) != checksum_array(a.view(np.uint32))
+    assert checksum_array(a) != checksum_array(a.reshape(2, 4))
+    assert checksum_array(a) == checksum_array(a.copy())
+
+
+def test_restore_detects_any_leaf_flip(corpus_engine, tmp_path):
+    _, eng = corpus_engine
+    _snap(eng, tmp_path)
+    where = corrupt_snapshot_leaf(tmp_path, seed=5)
+    with pytest.raises(IntegrityError) as exc:
+        load_analytics(tmp_path, repair=False)
+    bad_key = where.split(":")[0]
+    assert bad_key in exc.value.bad_keys
+
+
+def test_derived_flip_repaired_bit_identical(corpus_engine, tmp_path):
+    toks, eng = corpus_engine
+    for frag in ("superblock", "block", "sel1", "sel0", "zeros"):
+        d = tmp_path / frag.replace("/", "_")
+        _snap(eng, d)
+        corrupt_snapshot_leaf(d, seed=7, leaf_match=frag)
+        healed = load_analytics(d)
+        assert trees_identical(healed.shards, eng.shards), frag
+        lo, hi = jnp.asarray([5, 900]), jnp.asarray([64, 2600])
+        assert np.array_equal(
+            np.asarray(healed.range_histogram(lo, hi)),
+            np.asarray(eng.range_histogram(lo, hi))), frag
+
+
+def test_primary_flip_escalates_to_rebuild(corpus_engine, tmp_path):
+    _, eng = corpus_engine
+    _snap(eng, tmp_path)
+    corrupt_snapshot_leaf(tmp_path, seed=9, leaf_match="rank/words")
+    with pytest.raises(IntegrityError, match="primary"):
+        load_analytics(tmp_path)
+    # verify=False opts out entirely — the raw (corrupt) state loads
+    assert load_analytics(tmp_path, verify=False) is not None
+
+
+def test_classify_bad_keys():
+    derived, primary = classify_bad_keys([
+        ".bitvectors/.rank/.words", ".bitvectors/.rank/.block",
+        ".zeros", "seam_windows"])
+    assert primary == [".bitvectors/.rank/.words", "seam_windows"]
+    assert derived == [".bitvectors/.rank/.block", ".zeros"]
+    assert is_primary_key(".shards/.wm/.bitvectors/.rank/.words")
+    assert not is_primary_key(".shards/.mark/.words")
+
+
+# ---------------------------------------------------------------------------
+# step discovery: torn writes, half-deleted dirs, stale partials
+# ---------------------------------------------------------------------------
+
+def test_latest_step_skips_truncated_npz(tmp_path):
+    state = {"w": jnp.arange(4096, dtype=jnp.int32)}
+    save_checkpoint(tmp_path, 0, state)
+    save_checkpoint(tmp_path, 1, jax.tree.map(lambda x: x + 1, state))
+    truncate_file(tmp_path, "arrays.npz", keep_frac=0.3)   # newest = step 1
+    assert latest_step(tmp_path) == 0
+    restored, meta = restore_checkpoint(tmp_path, state)
+    assert meta["step"] == 0
+    assert np.array_equal(np.asarray(restored["w"]), np.arange(4096))
+
+
+def test_latest_step_skips_half_deleted_dir(tmp_path):
+    state = {"w": jnp.ones((8,), jnp.int32)}
+    save_checkpoint(tmp_path, 0, state)
+    save_checkpoint(tmp_path, 1, state)
+    delete_file(tmp_path, "meta.json")
+    assert latest_step(tmp_path) == 0
+    assert not step_dir_valid(tmp_path / "step_00000001")
+
+
+def test_latest_step_ignores_partial_tmp_and_junk(tmp_path):
+    state = {"w": jnp.ones((8,), jnp.int32)}
+    save_checkpoint(tmp_path, 3, state)
+    inject_partial_tmp(tmp_path, step=99)
+    (tmp_path / "step_junk").mkdir()
+    assert latest_step(tmp_path) == 3
+
+
+def test_no_valid_step_raises_filenotfound(corpus_engine, tmp_path):
+    _, eng = corpus_engine
+    _snap(eng, tmp_path)
+    truncate_file(tmp_path, "arrays.npz")
+    with pytest.raises(FileNotFoundError):
+        load_analytics(tmp_path)
+
+
+def test_stale_geometry_detected_by_meta(corpus_engine, tmp_path):
+    _, eng = corpus_engine
+    from repro.analytics import snapshot_meta
+    _snap(eng, tmp_path)
+    meta = snapshot_meta(tmp_path)
+    assert (meta["n"], meta["sigma"]) == (N, SIGMA)
+    assert meta["corpus_seed"] == 0          # identity travels with it
+
+
+# ---------------------------------------------------------------------------
+# structural verification + in-memory repair
+# ---------------------------------------------------------------------------
+
+def test_structural_verify_clean(corpus_engine):
+    _, eng = corpus_engine
+    assert verify_analytics(eng).ok
+
+
+def test_structural_verify_localizes_and_repairs(corpus_engine):
+    _, eng = corpus_engine
+    bad, where = flip_leaf_bit(eng, seed=11, leaf_match="sel1")
+    report = verify_analytics(bad)
+    assert not report.ok and report.repairable
+    assert any("sel1" in v.structure for v in report.violations)
+    healed = repair_analytics(bad)
+    assert verify_analytics(healed).ok
+    assert trees_identical(healed.shards, eng.shards)
+
+
+def test_structural_verify_flags_bitmap_corruption(corpus_engine):
+    _, eng = corpus_engine
+    # repair built on a corrupt bitmap must NOT reproduce the original:
+    # the checksum comparison is the backstop that catches it
+    want = tree_checksums(eng.shards)
+    bad, _ = flip_leaf_bit(eng, seed=13, leaf_match="rank/words")
+    assert not verify_analytics(bad).ok
+    attempted = repair_analytics(bad)
+    got = tree_checksums(attempted.shards)
+    assert any(got[k] != want[k] for k in want)
+
+
+def test_verify_single_wavelet_matrix(corpus_engine):
+    _, eng = corpus_engine
+    wm = eng.shard(0)
+    assert verify_wavelet_matrix(wm).ok
+    bad, _ = flip_leaf_bit(wm, seed=17, leaf_match="zeros")
+    report = verify_wavelet_matrix(bad)
+    assert not report.ok and report.repairable
+
+
+def test_fm_index_verify_and_repair(text_index):
+    _, idx = text_index
+    assert verify_sharded_index(idx).ok
+    for frag in ("C", "mark", "sa_sample"):
+        bad, _ = flip_leaf_bit(idx, seed=19, leaf_match=frag)
+        report = verify_sharded_index(bad)
+        assert not report.ok and report.repairable, frag
+        healed = repair_sharded_index(bad, deep=True)
+        assert trees_identical(healed.shards, idx.shards), frag
+
+
+def test_fm_index_shallow_repair_skips_sa(text_index):
+    _, idx = text_index
+    fm = jax.tree.map(lambda l: l[0], idx.shards)
+    assert verify_fm_index(fm).ok
+    bad, _ = flip_leaf_bit(fm, seed=23, leaf_match="C")
+    healed = repair_fm_index(bad, deep=False)
+    assert np.array_equal(np.asarray(healed.C), np.asarray(fm.C))
+    # deep repair additionally rebuilds the SA directories
+    deep = repair_fm_index(bad, deep=True)
+    assert trees_identical(deep, fm)
+
+
+def test_wavelet_tree_repair(text_index):
+    from repro.core.wavelet_tree import build_wavelet_tree
+    rng = np.random.default_rng(29)
+    seq = jnp.asarray(rng.integers(0, 16, 800).astype(np.uint32))
+    wt = build_wavelet_tree(seq, 16)
+    assert verify_wavelet_tree(wt).ok
+    bad, _ = flip_leaf_bit(wt, seed=31, leaf_match="node_starts")
+    healed = repair_wavelet_tree(bad)
+    assert trees_identical(healed, wt)
+
+
+def test_node_starts_monotone_violation():
+    from repro.core.wavelet_tree import build_wavelet_tree
+    rng = np.random.default_rng(37)
+    seq = jnp.asarray(rng.integers(0, 16, 500).astype(np.uint32))
+    wt = build_wavelet_tree(seq, 16)
+    ns = np.asarray(wt.node_starts).copy()
+    ns[2, 0], ns[2, 1] = ns[2, 1] + 5, ns[2, 0]          # break monotone
+    import dataclasses
+    bad = dataclasses.replace(wt, node_starts=jnp.asarray(ns))
+    report = verify_wavelet_tree(bad)
+    assert any(v.kind == "node_starts_monotone" for v in report.violations)
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode serving
+# ---------------------------------------------------------------------------
+
+def _covered_slice(toks, lo, hi, avail, shard_size):
+    parts = [toks[max(lo, s * shard_size):min(hi, (s + 1) * shard_size)]
+             for s in range(len(avail)) if avail[s]]
+    return np.concatenate(parts) if parts else np.empty(0, toks.dtype)
+
+
+def test_degraded_analytics_matches_survivor_oracle(corpus_engine):
+    toks, eng = corpus_engine
+    deg = eng.drop_shards(np.asarray([1], np.int32))
+    avail = np.asarray(deg.available)
+    assert not avail[1] and avail[0] and deg.degraded and not eng.degraded
+    sz = eng.shard_size
+    rng = np.random.default_rng(41)
+    for _ in range(8):
+        lo = int(rng.integers(0, N - 1))
+        hi = int(rng.integers(lo + 1, N + 1))
+        sl = _covered_slice(toks, lo, hi, avail, sz)
+        # count over surviving shards
+        got = int(deg.range_count(lo, hi, 3, 40))
+        assert got == int(((sl >= 3) & (sl < 40)).sum())
+        # quantile ranks within covered positions
+        k = int(rng.integers(0, max(1, hi - lo)))
+        got_q = int(deg.range_quantile(lo, hi, k))
+        want_q = (int(np.sort(sl)[min(k, len(sl) - 1)]) if len(sl)
+                  else -1)
+        assert got_q == want_q
+        # histogram/distinct over survivors
+        assert np.array_equal(
+            np.asarray(deg.range_histogram(lo, hi)),
+            np.bincount(sl, minlength=1 << eng.shards.nbits))
+        assert int(deg.range_distinct(lo, hi)) == len(np.unique(sl))
+
+
+def test_degraded_bounds_bracket_truth(corpus_engine):
+    toks, eng = corpus_engine
+    deg = eng.drop_shards(np.asarray([0, 2], np.int32))
+    lo = jnp.asarray([0, 100, 1500], jnp.int32)
+    hi = jnp.asarray([N, 1200, 2900], jnp.int32)
+    lower, upper, cov = deg.range_count_bounds(lo, hi, 3, 40)
+    cov = np.asarray(cov)
+    assert np.all((cov >= 0.0) & (cov <= 1.0))
+    truth = np.asarray(eng.range_count(lo, hi, 3, 40))
+    assert np.all(np.asarray(lower) <= truth)
+    assert np.all(truth <= np.asarray(upper))
+    hl, unc, hcov = deg.range_histogram_bounds(lo, hi)
+    htruth = np.asarray(eng.range_histogram(lo, hi))
+    assert np.all(np.asarray(hl) <= htruth)
+    assert np.all(htruth <= np.asarray(hl) + np.asarray(unc)[:, None])
+    assert np.allclose(np.asarray(hcov), cov)
+
+
+def test_full_availability_bounds_are_tight(corpus_engine):
+    _, eng = corpus_engine
+    lower, upper, cov = eng.range_count_bounds(10, 2000, 3, 40)
+    assert int(lower) == int(upper)
+    assert float(cov) == 1.0
+    assert float(eng.coverage(0, N)) == 1.0
+
+
+def test_restored_availability_roundtrip(corpus_engine):
+    _, eng = corpus_engine
+    deg = eng.with_availability(np.asarray([True, False, True]))
+    back = deg.with_availability(None)
+    assert back.available is None
+    with pytest.raises(ValueError):
+        eng.with_availability(np.asarray([True, False]))
+
+
+def test_degraded_index_counts_and_locate(text_index):
+    toks, idx = text_index
+    deg = idx.drop_shards(np.asarray([1], np.int32))
+    assert 0.0 < float(deg.coverage()) < 1.0
+    plen = 3
+    pats = np.stack([toks[50:53], toks[600:603]]).astype(np.int32)
+    lens = np.asarray([plen, plen], np.int32)
+    win = np.lib.stride_tricks.sliding_window_view(toks, plen)
+    lower, upper, _ = deg.count_bounds(pats, lens)
+    for b in range(2):
+        hits = np.nonzero((win == pats[b]).all(axis=1))[0]
+        start_sh, end_sh = hits >> 9, (hits + plen - 1) >> 9
+        want = int(np.sum((start_sh != 1) & (end_sh != 1)))
+        assert int(np.asarray(deg.count(pats, lens))[b]) == want
+        full = int(np.asarray(idx.count(pats, lens))[b])
+        assert int(lower[b]) <= full <= int(upper[b])
+    # locate never reports positions on the lost shard
+    pos = np.asarray(deg.locate(pats, lens, max_hits_per_shard=4))
+    live = pos[pos >= 0]
+    assert np.all((live >> 9) != 1)
+
+
+# ---------------------------------------------------------------------------
+# retry / backoff
+# ---------------------------------------------------------------------------
+
+def test_with_retry_succeeds_after_transient_failures():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return "ok"
+
+    seen = []
+    assert with_retry(flaky, retries=3, backoff_s=0.0,
+                      on_retry=lambda a, e: seen.append(a)) == "ok"
+    assert calls["n"] == 3 and seen == [0, 1]
+
+
+def test_with_retry_exhausts_budget():
+    calls = {"n": 0}
+
+    def always_fails():
+        calls["n"] += 1
+        raise ValueError("permanent")
+
+    with pytest.raises(ValueError):
+        with_retry(always_fails, retries=2, backoff_s=0.0)
+    assert calls["n"] == 3
+
+
+def test_with_retry_only_catches_listed_exceptions():
+    def raises_type_error():
+        raise TypeError("not retryable")
+
+    with pytest.raises(TypeError):
+        with_retry(raises_type_error, retries=5, backoff_s=0.0,
+                   exceptions=(OSError,))
