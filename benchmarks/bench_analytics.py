@@ -1,19 +1,22 @@
 """Range-analytics engine: build throughput + per-op batched query
 throughput (quantile / count / top-k / distinct), single-shard fused
-Pallas quantile kernel vs the XLA descent, sharded fan-out scaling."""
+Pallas quantile kernel vs the XLA descent, sharded fan-out scaling —
+plus the telemetry acceptance rows: per-op rows carry ``compile_s``
+separately from steady-state, and the ``obs_*`` rows prove the metrics
+layer costs nothing when disabled (and near-nothing when enabled) on the
+serving path."""
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.analytics import build_sharded_analytics, range_quantile
 from repro.data import make_corpus
 from repro.kernels.ops import wm_quantile_batch
 
-from .common import record, save, time_fn
+from .common import record, save, time_fn, time_fn_split
 
 
 def _queries(n: int, num: int, seed: int = 1):
@@ -24,60 +27,101 @@ def _queries(n: int, num: int, seed: int = 1):
     return jnp.asarray(lo), jnp.asarray(hi.astype(np.int32)), jnp.asarray(k)
 
 
+def _obs_overhead_rows(rows: list, eng, n: int) -> None:
+    """Telemetry overhead acceptance: the instrumented serving path timed
+    with metrics disabled vs enabled (Python-side counters fire at trace
+    time, so steady-state jitted calls must be unaffected — within
+    noise), plus the raw per-call cost of the instruments themselves."""
+    lo, hi, k = _queries(n, 256, seed=3)
+    q = jax.jit(lambda e, a, b, c: e.range_quantile(a, b, c))
+
+    with obs.disabled():
+        t_off = time_fn(q, eng, lo, hi, k, iters=5)
+    record(rows, f"analytics_quantile_b256_n{n}_obs_disabled", t_off,
+           queries_per_s=round(256 / t_off, 1))
+    t_on = time_fn(q, eng, lo, hi, k, iters=5)
+    record(rows, f"analytics_quantile_b256_n{n}_obs_enabled", t_on,
+           queries_per_s=round(256 / t_on, 1),
+           overhead_pct=round((t_on - t_off) / t_off * 100, 2))
+
+    # raw instrument cost, per call (counter inc / histogram observe),
+    # disabled mode must be a dict-lookup + early-return no-op
+    iters = 100_000
+    c = obs.counter("bench.obs_overhead")
+    h = obs.histogram("bench.obs_overhead_h")
+
+    def _loop(op):
+        sw = obs.Stopwatch()
+        for _ in range(iters):
+            op()
+        return sw.lap() / iters
+
+    record(rows, "obs_counter_inc_enabled", _loop(c.inc))
+    record(rows, "obs_histogram_observe_enabled",
+           _loop(lambda: h.observe(1e-3)))
+    with obs.disabled():
+        record(rows, "obs_counter_inc_disabled", _loop(c.inc))
+        record(rows, "obs_histogram_observe_disabled",
+               _loop(lambda: h.observe(1e-3)))
+
+
 def run(n: int = 1 << 18, out: list | None = None) -> list:
     rows = out if out is not None else []
     vocab = 4096
     toks = np.asarray(make_corpus(n, vocab, seed=0), np.int64)
 
     # --- build ------------------------------------------------------------
-    t0 = time.perf_counter()
+    sw = obs.Stopwatch()
     eng = build_sharded_analytics(toks, vocab, shard_bits=14)
     jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
-    t_build = time.perf_counter() - t0
+    t_build = sw.lap()
     record(rows, f"analytics_build_n{n}_sb14", t_build,
            ktok_per_s=round(n / t_build / 1e3, 1),
            bits_per_token=round(eng.bits_per_token(), 1),
            num_shards=eng.num_shards)
 
-    # --- per-op batched throughput ---------------------------------------
+    # --- per-op batched throughput (steady vs compile) --------------------
     for batch in (256, 1024):
         lo, hi, k = _queries(n, batch)
         sym_lo = jnp.asarray(np.arange(batch, dtype=np.int32) % vocab)
         sym_hi = jnp.minimum(sym_lo + 64, vocab)
 
         q = jax.jit(lambda e, a, b, c: e.range_quantile(a, b, c))
-        t = time_fn(q, eng, lo, hi, k)
+        t, t_c = time_fn_split(q, eng, lo, hi, k)
         record(rows, f"analytics_quantile_b{batch}_n{n}", t,
-               queries_per_s=round(batch / t, 1))
+               queries_per_s=round(batch / t, 1), compile_s=round(t_c, 2))
 
         c = jax.jit(lambda e, a, b, s0, s1: e.range_count(a, b, s0, s1))
-        t = time_fn(c, eng, lo, hi, sym_lo, sym_hi)
+        t, t_c = time_fn_split(c, eng, lo, hi, sym_lo, sym_hi)
         record(rows, f"analytics_count_b{batch}_n{n}", t,
-               queries_per_s=round(batch / t, 1))
+               queries_per_s=round(batch / t, 1), compile_s=round(t_c, 2))
 
     lo, hi, k = _queries(n, 256)
     tk = jax.jit(lambda e, a, b: e.range_topk(a, b, 8))
-    t = time_fn(tk, eng, lo, hi)
+    t, t_c = time_fn_split(tk, eng, lo, hi)
     record(rows, f"analytics_topk8_b256_n{n}", t,
-           queries_per_s=round(256 / t, 1))
+           queries_per_s=round(256 / t, 1), compile_s=round(t_c, 2))
 
     d = jax.jit(lambda e, a, b: e.range_distinct(a, b))
-    t = time_fn(d, eng, lo, hi)
+    t, t_c = time_fn_split(d, eng, lo, hi)
     record(rows, f"analytics_distinct_b256_n{n}", t,
-           queries_per_s=round(256 / t, 1))
+           queries_per_s=round(256 / t, 1), compile_s=round(t_c, 2))
 
     # --- fused Pallas quantile kernel vs XLA descent (one shard) ----------
     wm = eng.shard(0)
     m = wm.n
     lo1, hi1, k1 = _queries(m, 1024, seed=2)
     f_fused = jax.jit(lambda w, a, b, c: wm_quantile_batch(w, a, b, c))
-    t = time_fn(f_fused, wm, lo1, hi1, k1)
+    t, t_c = time_fn_split(f_fused, wm, lo1, hi1, k1)
     record(rows, f"quantile_kernel_fused_b1024_m{m}", t,
-           queries_per_s=round(1024 / t, 1))
+           queries_per_s=round(1024 / t, 1), compile_s=round(t_c, 2))
     f_xla = jax.jit(lambda w, a, b, c: range_quantile(w, a, b, c))
-    t = time_fn(f_xla, wm, lo1, hi1, k1)
+    t, t_c = time_fn_split(f_xla, wm, lo1, hi1, k1)
     record(rows, f"quantile_xla_b1024_m{m}", t,
-           queries_per_s=round(1024 / t, 1))
+           queries_per_s=round(1024 / t, 1), compile_s=round(t_c, 2))
+
+    # --- telemetry overhead acceptance ------------------------------------
+    _obs_overhead_rows(rows, eng, n)
 
     if out is None:
         save(rows, "analytics.json")

@@ -2,8 +2,6 @@
 (batched backward-search count, sampled-SA locate)."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,7 +10,9 @@ from repro.data import make_corpus
 from repro.index import (build_fm_index, build_sharded_index,
                          sample_patterns, suffix_array)
 
-from .common import record, save, time_fn
+from repro import obs
+
+from .common import record, save, time_fn, time_fn_split
 
 
 def _patterns(toks: np.ndarray, num: int, max_len: int, pad: int):
@@ -36,10 +36,10 @@ def run(n: int = 1 << 18, out: list | None = None) -> list:
 
     # --- full sharded build ----------------------------------------------
     shard_bits = 13
-    t0 = time.perf_counter()
+    sw = obs.Stopwatch()
     idx = build_sharded_index(toks, vocab, shard_bits=shard_bits)
     jax.block_until_ready(jax.tree.leaves(idx.shards)[0])
-    t_build = time.perf_counter() - t0
+    t_build = sw.lap()
     record(rows, f"index_build_n{n}_sb{shard_bits}", t_build,
            ktok_per_s=round(n / t_build / 1e3, 1),
            bits_per_token=round(idx.bits_per_token(), 1),
@@ -49,26 +49,27 @@ def run(n: int = 1 << 18, out: list | None = None) -> list:
     for batch in (64, 512):
         pats, lens = _patterns(toks, batch, 8, pad=vocab)
         f = jax.jit(lambda ix, p, l: ix.count(p, l))
-        t = time_fn(f, idx, pats, lens)
+        t, t_c = time_fn_split(f, idx, pats, lens)
         record(rows, f"index_count_b{batch}_n{n}", t,
                patterns_per_s=round(batch / t, 1),
-               rank_calls=2 * batch * 8 * idx.num_shards)
+               rank_calls=2 * batch * 8 * idx.num_shards,
+               compile_s=round(t_c, 2))
 
     # --- locate ------------------------------------------------------------
     pats, lens = _patterns(toks, 64, 8, pad=vocab)
     g = jax.jit(lambda ix, p, l: ix.locate(p, l, 4))
-    t = time_fn(g, idx, pats, lens)
+    t, t_c = time_fn_split(g, idx, pats, lens)
     record(rows, f"index_locate_b64_h4_n{n}", t,
-           patterns_per_s=round(64 / t, 1))
+           patterns_per_s=round(64 / t, 1), compile_s=round(t_c, 2))
 
     # --- single-shard FM-index count (no shard fan-out, larger text) ------
     one = jnp.asarray(toks[:1 << 15], jnp.int32)
     fm = build_fm_index(one, vocab)
     pats, lens = _patterns(toks[:1 << 15], 256, 8, pad=vocab)
     h = jax.jit(lambda f_, p, l: f_.count(p, l))
-    t = time_fn(h, fm, pats, lens)
+    t, t_c = time_fn_split(h, fm, pats, lens)
     record(rows, f"fm_count_single_n{1 << 15}_b256", t,
-           patterns_per_s=round(256 / t, 1))
+           patterns_per_s=round(256 / t, 1), compile_s=round(t_c, 2))
 
     if out is None:
         save(rows, "index.json")

@@ -1,13 +1,21 @@
-"""Benchmark helpers: jit-compile once, time steady-state executions."""
+"""Benchmark helpers: jit-compile once, time steady-state executions.
+
+Timing is delegated to ``repro.obs.time_compiled`` — the same timer the
+serving CLIs use — so every suite separates ``compile_s`` (first-call
+cost: trace + lower + compile + run) from the steady-state median that
+``us_per_call`` reports.
+"""
 from __future__ import annotations
 
 import json
 import subprocess
 import time
 from pathlib import Path
-from typing import Callable
+from typing import Callable, Tuple
 
 import jax
+
+from repro import obs
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -40,17 +48,20 @@ def run_meta(seed: int = BENCH_SEED) -> dict:
     }
 
 
+def time_fn_split(fn: Callable, *args, warmup: int = 1,
+                  iters: int = 3) -> Tuple[float, float]:
+    """(steady_s, compile_s): first call (compile + run) timed apart from
+    the steady-state median — ``repro.obs.time_compiled`` under the hood.
+    ``warmup`` > 1 adds extra untimed calls between the two phases."""
+    _, steady_s, compile_s = obs.time_compiled(fn, *args, iters=iters)
+    for _ in range(max(0, warmup - 1)):
+        jax.block_until_ready(fn(*args))
+    return steady_s, compile_s
+
+
 def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall seconds of ``fn(*args)`` after warmup (handles jit)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    ts.sort()
-    return ts[len(ts) // 2]
+    return time_fn_split(fn, *args, warmup=warmup, iters=iters)[0]
 
 
 def record(rows: list, name: str, seconds: float, **derived) -> dict:
@@ -61,13 +72,18 @@ def record(rows: list, name: str, seconds: float, **derived) -> dict:
     return row
 
 
-def save(rows: list, fname: str, seed: int = BENCH_SEED) -> Path:
+def save(rows: list, fname: str, seed: int = BENCH_SEED,
+         extra_meta: dict | None = None) -> Path:
     """Persist ``{"meta": provenance, "rows": rows}`` under results/bench/,
     creating the directory tree on first run. The meta block (git commit,
-    jax version, RNG seed, …) makes every artifact self-describing. numpy
-    scalars in derived fields serialize as plain floats."""
+    jax version, RNG seed, …) makes every artifact self-describing —
+    ``extra_meta`` extends it (e.g. ``{"fast": True}``). numpy scalars in
+    derived fields serialize as plain floats."""
     path = RESULTS_DIR / fname
     path.parent.mkdir(parents=True, exist_ok=True)
-    path.write_text(json.dumps({"meta": run_meta(seed), "rows": rows},
+    meta = run_meta(seed)
+    if extra_meta:
+        meta.update(extra_meta)
+    path.write_text(json.dumps({"meta": meta, "rows": rows},
                                indent=1, default=float))
     return path

@@ -4,18 +4,22 @@
 ``PYTHONPATH=src python -m benchmarks.run --only wt`` — one suite
 
 Each suite prints ``name,us_per_call,derived`` CSV lines and persists JSON
-under results/bench/.
+under results/bench/. ``--fast`` runs CI-sized inputs into
+``<suite>.fast.json`` (meta records ``fast: true``) and warns when a
+suite's *full-size* trajectory is missing or was last recorded at a
+different commit — a fast artifact is a smoke signal, not a perf number.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from . import (bench_analytics, bench_construction, bench_corpus_store,
                bench_huffman, bench_index, bench_kernels, bench_multiary,
                bench_rank_select, bench_robust, bench_wavelet_matrix,
                bench_wavelet_tree)
-from .common import save
+from .common import RESULTS_DIR, run_meta, save
 
 SUITES = {
     "wt": ("wavelet_tree.json", bench_wavelet_tree.run),
@@ -30,6 +34,35 @@ SUITES = {
     "analytics": ("analytics.json", bench_analytics.run),
     "robust": ("robust.json", bench_robust.run),
 }
+
+
+def stale_full_runs(suites: dict, commit: str) -> list:
+    """[(key, reason)] for suites whose full-size artifact is missing or
+    was recorded at a different commit than ``commit`` — the drift a fast
+    run can hide (e.g. ``robust.fast.json`` exists, ``robust.json`` never
+    ran)."""
+    out = []
+    for key, (fname, _) in suites.items():
+        path = RESULTS_DIR / fname
+        if not path.exists():
+            out.append((key, f"{fname} missing (full-size run never "
+                             f"recorded)"))
+            continue
+        try:
+            data = json.loads(path.read_text())
+            meta = data.get("meta", {}) if isinstance(data, dict) else {}
+        except Exception:                                 # noqa: BLE001
+            out.append((key, f"{fname} unreadable"))
+            continue
+        if not meta:
+            out.append((key, f"{fname} has no provenance meta (predates "
+                             f"the meta block — rerun full-size)"))
+            continue
+        got = meta.get("git_commit", "unknown")
+        if got != commit:
+            out.append((key, f"{fname} recorded at {got[:12]} ≠ HEAD "
+                             f"{commit[:12]} (full-size trajectory stale)"))
+    return out
 
 
 def main() -> None:
@@ -53,7 +86,15 @@ def main() -> None:
             kwargs["n"] = 1 << 16
             fname = fname.replace(".json", ".fast.json")
         rows = fn(**kwargs)
-        save(rows, fname)
+        save(rows, fname, extra_meta={"fast": True} if args.fast else None)
+    if args.fast:
+        stale = stale_full_runs(todo, run_meta()["git_commit"])
+        for key, reason in stale:
+            print(f"WARNING: [{key}] {reason}")
+        if stale:
+            print(f"({len(stale)} suite(s) have no up-to-date full-size "
+                  f"run — run `python -m benchmarks.run` without --fast "
+                  f"to refresh the trajectory)")
     print(f"total {time.time() - t0:.1f}s")
 
 

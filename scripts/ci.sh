@@ -18,6 +18,51 @@ python -m repro.launch.index --smoke
 echo "== range analytics smoke =="
 python -m repro.launch.analytics --smoke
 
+# telemetry: the launch layer must time through repro.obs (Stopwatch /
+# time_compiled / timed_op) — a raw perf_counter there bypasses the
+# metrics the SLO gate reads
+echo "== obs time-source lint =="
+if grep -rn "time\.perf_counter\|time\.time(" src/repro/launch/; then
+    echo "FAIL: raw time.* call in src/repro/launch/ — use repro.obs timers"
+    exit 1
+fi
+echo "launch layer timing goes through repro.obs ✓"
+
+# end-to-end metrics pipeline: serve with --metrics-dir, then validate
+# the exported snapshot/JSONL (per-op latency histograms with nonzero
+# counts, path-selection counters, correlated span events) and the SLO
+# gate's pass/fail exit codes
+echo "== obs export smoke =="
+OBS_DIR="$(mktemp -d)"
+trap 'rm -rf "$OBS_DIR"' EXIT
+python -m repro.launch.analytics --smoke --metrics-dir "$OBS_DIR"
+python - "$OBS_DIR" <<'PY'
+import json, sys
+from pathlib import Path
+d = Path(sys.argv[1])
+snap = json.loads((d / "snapshot.json").read_text())
+hists = snap["histograms"]
+for op in ("quantile", "count", "topk", "distinct"):
+    h = hists[f"serve.analytics.{op}.latency_s"]
+    assert h["count"] >= 1 and h["p99"] > 0, (op, h)
+builds = {k: v for k, v in snap["counters"].items()
+          if k.startswith("core.build")}
+assert sum(builds.values()) >= 1, builds
+events = [json.loads(ln) for ln in
+          (d / "events.jsonl").read_text().splitlines() if ln.strip()]
+spans = [e for e in events if e["kind"] == "span"]
+assert any(e["name"] == "analytics.serve" for e in spans), spans
+assert all("span_id" in e for e in spans)
+print(f"obs export ✓ ({len(hists)} histograms, {len(events)} events)")
+PY
+python -m repro.launch.obs "$OBS_DIR" --slo 'analytics.*:p99_ms<=600000'
+if python -m repro.launch.obs "$OBS_DIR" --slo 'analytics.*:qps>=1e18' \
+        >/dev/null; then
+    echo "FAIL: SLO gate did not reject an impossible bound"
+    exit 1
+fi
+echo "SLO gate pass/fail exit codes ✓"
+
 # every fault class injected against a live snapshot + engine: silent
 # leaf corruption (detected by checksums, repaired bit-identically),
 # primary-bitmap corruption (detected, rebuild signalled), torn/partial

@@ -39,6 +39,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.wavelet_matrix import (WaveletMatrix, wm_child_interval,
                                        wm_interval_zeros)
 
@@ -194,8 +195,11 @@ def sharded_range_quantile_fused(shards: WaveletMatrix, shard_bits: int,
     fused kernel assumes full shard residency.
     """
     if available is not None:
+        obs.counter("analytics.path", op="quantile",
+                    path="degraded_xla").inc()
         return sharded_range_quantile(shards, shard_bits, n, lo, hi, k,
                                       available)
+    obs.counter("analytics.path", op="quantile", path="kernel").inc()
     from repro.kernels import ops as _kops
     return _kops.wm_quantile_sharded_batch(shards, shard_bits, n, lo, hi, k,
                                            interpret=interpret)
@@ -364,45 +368,54 @@ class ShardedAnalytics:
         batches through the fused sharded Pallas descent (one launch per
         query block, identical results); a degraded engine always takes
         the XLA path."""
+        obs.counter("analytics.op", op="quantile").inc()
         if use_kernel:
             return sharded_range_quantile_fused(self.shards, self.shard_bits,
                                                 self.n, lo, hi, k,
                                                 available=self.available)
+        obs.counter("analytics.path", op="quantile", path="xla").inc()
         return sharded_range_quantile(self.shards, self.shard_bits, self.n,
                                       lo, hi, k, self.available)
 
     def range_count(self, lo, hi, sym_lo, sym_hi) -> jax.Array:
+        obs.counter("analytics.op", op="count").inc()
         return sharded_range_count(self.shards, self.shard_bits, self.n,
                                    lo, hi, sym_lo, sym_hi, self.available)
 
     def range_count_bounds(self, lo, hi, sym_lo, sym_hi):
         """(lower, upper, coverage) bracketing the full-corpus count —
         the honest degraded-mode answer."""
+        obs.counter("analytics.op", op="count_bounds").inc()
         return sharded_range_count_bounds(self.shards, self.shard_bits,
                                           self.n, lo, hi, sym_lo, sym_hi,
                                           self.available)
 
     def range_topk(self, lo, hi, k: int):
+        obs.counter("analytics.op", op="topk").inc()
         return sharded_range_topk(self.shards, self.shard_bits, self.n,
                                   lo, hi, k, self.available)
 
     def range_topk_greedy(self, lo, hi, k: int, budget: int | None = None,
                           prune: bool = True):
+        obs.counter("analytics.op", op="topk_greedy").inc()
         return sharded_range_topk_greedy(self.shards, self.shard_bits,
                                          self.n, lo, hi, k, budget, prune,
                                          self.available)
 
     def range_distinct(self, lo, hi) -> jax.Array:
+        obs.counter("analytics.op", op="distinct").inc()
         return sharded_range_distinct(self.shards, self.shard_bits, self.n,
                                       lo, hi, self.available)
 
     def range_histogram(self, lo, hi) -> jax.Array:
+        obs.counter("analytics.op", op="histogram").inc()
         return sharded_range_histogram(self.shards, self.shard_bits, self.n,
                                        lo, hi, self.available)
 
     def range_histogram_bounds(self, lo, hi):
         """(hist_lower, uncovered, coverage): true per-symbol counts lie
         in [hist_lower[c], hist_lower[c] + uncovered]."""
+        obs.counter("analytics.op", op="histogram_bounds").inc()
         return sharded_range_histogram_bounds(self.shards, self.shard_bits,
                                               self.n, lo, hi, self.available)
 

@@ -126,6 +126,7 @@ def load_analytics(directory: str | Path,
     ``IntegrityError`` escapes so the caller rebuilds from source
     (``launch.analytics`` does exactly that).
     """
+    from repro import obs
     from repro.robust.integrity import IntegrityError, tree_checksums
     from repro.robust.repair import classify_bad_keys, repair_analytics
     meta = snapshot_meta(directory, step=step)
@@ -138,26 +139,43 @@ def load_analytics(directory: str | Path,
                                 sigma=meta["sigma"],
                                 shard_bits=meta["shard_bits"])
 
-    try:
-        shards, _ = restore_checkpoint(directory, target, step=step,
-                                       verify=verify)
-        return make(shards)
-    except IntegrityError as err:
-        if not repair:
-            raise
-        derived, primary = classify_bad_keys(err.bad_keys)
-        if primary:
-            raise IntegrityError(
-                primary, where=f"{directory} (primary bitmaps corrupt — "
-                "repair impossible, rebuild from source)") from err
-        shards, _ = restore_checkpoint(directory, target, step=step,
-                                       verify=False)
-        engine = repair_analytics(make(shards))
-        want = meta.get("leaf_crc32", {})
-        got = tree_checksums(engine.shards)
-        still_bad = sorted(k for k in derived if got.get(k) != want.get(k))
-        if still_bad:
-            raise IntegrityError(
-                still_bad, where=f"{directory} (repair did not converge)"
-            ) from err
-        return engine
+    with obs.span("analytics.load", dir=str(directory), step=step) as lsp:
+        try:
+            with obs.span("analytics.load.restore", verify=verify):
+                shards, _ = restore_checkpoint(directory, target, step=step,
+                                               verify=verify)
+            obs.counter("robust.restore", outcome="clean").inc()
+            lsp.set("outcome", "clean")
+            return make(shards)
+        except IntegrityError as err:
+            if not repair:
+                obs.counter("robust.restore", outcome="corrupt_norepair").inc()
+                lsp.set("outcome", "corrupt_norepair")
+                raise
+            derived, primary = classify_bad_keys(err.bad_keys)
+            obs.event("integrity.corrupt", derived=len(derived),
+                      primary=len(primary))
+            if primary:
+                obs.counter("robust.restore", outcome="primary_corrupt").inc()
+                lsp.set("outcome", "primary_corrupt")
+                raise IntegrityError(
+                    primary, where=f"{directory} (primary bitmaps corrupt — "
+                    "repair impossible, rebuild from source)") from err
+            with obs.span("analytics.load.repair", bad_leaves=len(derived)):
+                shards, _ = restore_checkpoint(directory, target, step=step,
+                                               verify=False)
+                engine = repair_analytics(make(shards))
+                want = meta.get("leaf_crc32", {})
+                got = tree_checksums(engine.shards)
+                still_bad = sorted(k for k in derived
+                                   if got.get(k) != want.get(k))
+            if still_bad:
+                obs.counter("robust.restore",
+                            outcome="repair_diverged").inc()
+                lsp.set("outcome", "repair_diverged")
+                raise IntegrityError(
+                    still_bad, where=f"{directory} (repair did not converge)"
+                ) from err
+            obs.counter("robust.restore", outcome="repaired").inc()
+            lsp.set("outcome", "repaired")
+            return engine

@@ -191,9 +191,15 @@ def build_huffman_wavelet_tree(seq: jax.Array, codes: jax.Array,
     the internal order of the retired tail — which never contributes
     another bit — differs).
     """
+    from repro import obs
     concrete = not (isinstance(codes, jax.core.Tracer)
                     or isinstance(lengths, jax.core.Tracer))
-    if fused and concrete and max_len > 1:
+    if fused and not concrete:
+        obs.counter("core.huffman_traced_codebook_fallback").inc()
+    take_fused = fused and concrete and max_len > 1
+    obs.counter("core.build", builder="huffman",
+                path="fused" if take_fused else "scatter").inc()
+    if take_fused:
         return _build_huffman_fused(seq, codes, lengths, max_len)
     n = int(seq.shape[0])
     sidx = seq.astype(_I32)

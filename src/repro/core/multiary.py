@@ -93,10 +93,13 @@ def build_multiary_wavelet_tree(seq: jax.Array, sigma: int, width: int = 2,
     full-symbol histogram. ``fused=False`` keeps the scatter baseline;
     outputs are bit-identical.
     """
+    from repro import obs
     n = int(seq.shape[0])
     nbits = max(1, math.ceil(math.log2(max(2, sigma))))
     nlevels = (nbits + width - 1) // width
     total_bits = width * nlevels
+    obs.counter("core.build", builder="multiary",
+                path="fused" if fused else "scatter").inc()
     if fused:
         return _build_multiary_fused(seq, width, nlevels, n, chunk_syms)
     node_starts = _node_starts_multiary(seq, width, nlevels)

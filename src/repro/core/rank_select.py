@@ -313,6 +313,9 @@ def build_bitvector_levels(words: jax.Array, n: int,
     ``rank_build_levels`` kernel (one launch for all levels, paper Theorem
     5.1); the select samples stay XLA (they are O(W) per level).
     """
+    from repro import obs
+    obs.counter("core.rank_build",
+                impl="kernel" if use_kernels else "xla").inc()
     if use_kernels:
         from repro.kernels import ops as _kops
         superblock, block = _kops.rank_build_levels(words, n,

@@ -69,10 +69,16 @@ def default_use_kernels(seq: jax.Array) -> bool:
     level kernels carry cross-grid scratch, so they must not be vmapped).
     The guard cannot see through ``vmap``-of-``jit`` composition — callers
     wrapping a *jitted* builder in ``vmap`` on TPU must pass
-    ``use_kernels=False`` themselves."""
+    ``use_kernels=False`` themselves. Guard trips are counted
+    (``core.kernel_guard_trip``) so profile runs show when shard builds
+    silently lose the kernels."""
     from jax.interpreters import batching
-    return (jax.default_backend() == "tpu"
-            and not isinstance(seq, batching.BatchTracer))
+    from repro import obs
+    if isinstance(seq, batching.BatchTracer):
+        if jax.default_backend() == "tpu":
+            obs.counter("core.kernel_guard_trip", reason="batch_tracer").inc()
+        return False
+    return jax.default_backend() == "tpu"
 
 
 @jax.tree_util.register_dataclass
@@ -127,8 +133,11 @@ def build_wavelet_matrix(seq: jax.Array, sigma: int, tau: int = 8,
     Output is bit-identical across ``fused``/``use_kernels``/``big_step``
     settings (and to ``build_wavelet_matrix_levelwise``).
     """
+    from repro import obs
     if use_kernels is None:
         use_kernels = default_use_kernels(seq)
+    obs.counter("core.build", builder="wm",
+                path="fused" if fused else "scatter").inc()
     if not fused:
         return _build_wavelet_matrix_steps(seq, sigma, tau, big_step,
                                            sample_rate)
@@ -158,6 +167,8 @@ def build_wavelet_matrix(seq: jax.Array, sigma: int, tau: int = 8,
             # any) still advances — radix/xla big steps re-sort from the
             # chunk-start order and subsume it.
             move = (not last_level) and (t < width - 1 or need_idx)
+            obs.counter("core.level_step", builder="wm",
+                        impl="kernel" if use_kernels else "xla").inc()
             if use_kernels:
                 from repro.kernels import ops as _kops
                 dest, words, z = _kops.wm_level_step_fused(sub, shift, n)
@@ -245,6 +256,8 @@ def build_wavelet_matrix_levelwise(seq: jax.Array, sigma: int,
                                    sample_rate: int = 512) -> WaveletMatrix:
     """Prior-work baseline [Shun'15]: O(n·logσ) work, full-width symbols
     permuted at every level. Kept for the benchmarks' before/after rows."""
+    from repro import obs
+    obs.counter("core.build", builder="wm_levelwise", path="scatter").inc()
     n = int(seq.shape[0])
     nbits = num_levels(sigma)
     order = seq.astype(_U32)

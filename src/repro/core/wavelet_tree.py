@@ -161,8 +161,11 @@ def build_wavelet_tree(seq: jax.Array, sigma: int, tau: int = 8,
     ``None`` auto-enables on TPU with the same BatchTracer guard as
     ``build_wavelet_matrix``.
     """
+    from repro import obs
     if use_kernels is None:
         use_kernels = default_use_kernels(seq)
+    obs.counter("core.build", builder="wt",
+                path="fused" if fused else "scatter").inc()
     if not fused:
         return _build_wavelet_tree_steps(seq, sigma, tau, big_step,
                                          sample_rate)
@@ -192,7 +195,16 @@ def build_wavelet_tree(seq: jax.Array, sigma: int, tau: int = 8,
             words = None
             if move:
                 nid = _level_nid(node_starts, l, n)
-                if use_kernels and _wt_kernel_fits(l):
+                kernel_ok = _wt_kernel_fits(l)
+                if use_kernels and not kernel_ok:
+                    # deep level: 2^(l+1) buckets exceed the wt_level VMEM
+                    # bound — the gap ROADMAP item 4's deep-level kernel
+                    # will close; count it so profiles show the fallback
+                    obs.counter("core.wt_deep_fallback", level=l).inc()
+                obs.counter("core.level_step", builder="wt",
+                            impl="kernel" if use_kernels and kernel_ok
+                            else "xla").inc()
+                if use_kernels and kernel_ok:
                     from repro.kernels import ops as _kops
                     dest, words = _kops.wt_level_step_fused(
                         sub, nid, shift, 1 << (l + 1), n)
@@ -300,6 +312,9 @@ def build_wavelet_tree_levelwise(seq: jax.Array, sigma: int,
     select-gather (full-width symbols still move every level — the
     baseline's work bound is unchanged, only the scatter is gone).
     """
+    from repro import obs
+    obs.counter("core.build", builder="wt_levelwise",
+                path="fused" if fused else "scatter").inc()
     n = int(seq.shape[0])
     nbits = num_levels(sigma)
     node_starts = _node_starts_from_symbols(seq, nbits)
@@ -348,6 +363,9 @@ def build_wavelet_tree_dd(seq: jax.Array, sigma: int, num_chunks: int,
     copy, with the boundary-word bookkeeping replaced by the mark trick).
     ``fused=False`` keeps the historical element-granular scatter merge.
     """
+    from repro import obs
+    obs.counter("core.build", builder="wt_dd",
+                path="fused" if fused else "scatter").inc()
     n = int(seq.shape[0])
     assert n % num_chunks == 0, "pad the sequence to a multiple of num_chunks"
     m = n // num_chunks

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data.shard_build import build_shards_stacked
 
 from .fm_index import FMIndex, build_fm_index, fm_count, fm_locate
@@ -138,6 +139,8 @@ class ShardedTextIndex:
         windows. Exact for lengths ≤ min(seam_overlap + 1, shard_size).
         On a degraded index this counts surviving shards only (a lower
         bound on the true count — ``count_bounds`` brackets it)."""
+        obs.counter("index.op", op="count",
+                    path="degraded" if self.degraded else "full").inc()
         patterns = jnp.atleast_2d(jnp.asarray(patterns, _I32))
         within = jnp.sum(self.count_by_shard(patterns, lengths), axis=0)
         return within + self._seam_count(*self._sanitize(patterns, lengths))
@@ -151,6 +154,8 @@ class ShardedTextIndex:
         ``upper = lower + unavailable_positions + skipped_seams·(len−1)``.
         Fully-available indexes return lower == upper, coverage 1.0.
         """
+        obs.counter("index.op", op="count_bounds",
+                    path="degraded" if self.degraded else "full").inc()
         lower = self.count(patterns, lengths)
         if self.available is None:
             return lower, lower, jnp.float32(1.0)
@@ -220,6 +225,8 @@ class ShardedTextIndex:
         each shard's true hit count are -1. Sorted ascending per pattern
         with the -1 padding swept to the back.
         """
+        obs.counter("index.op", op="locate",
+                    path="degraded" if self.degraded else "full").inc()
         patterns, lengths = self._sanitize(patterns, lengths)
         S = self.num_shards
 

@@ -11,6 +11,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
+
 from . import bitpack as _bitpack
 from . import radix_rank as _radix_rank
 from . import rank_build as _rank_build
@@ -28,6 +30,8 @@ def bitpack(bits: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Pack a (n,) 0/1 vector into ceil(n/32) uint32 words (LSB-first)."""
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="bitpack",
+                 interpret=str(bool(interpret)).lower()).inc()
     n = bits.shape[0]
     w = (n + 31) // 32
     wpad = ((w + _bitpack.LANES - 1) // _bitpack.LANES) * _bitpack.LANES
@@ -48,6 +52,8 @@ def rank_build(words: jax.Array, n: int,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="rank_build",
+                 interpret=str(bool(interpret)).lower()).inc()
     w = (n + 31) // 32
     sw = _rank_build.STEP_WORDS
     wpad = ((w + sw - 1) // sw) * sw
@@ -70,6 +76,8 @@ def wm_level_step(sub: jax.Array, shift: int, n: int,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="wm_level_step",
+                 interpret=str(bool(interpret)).lower()).inc()
     blk = _wm_level.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     # pad with all-ones keys: they partition past n and are trimmed
@@ -97,6 +105,8 @@ def rank_build_levels(words: jax.Array, n: int,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="rank_build_levels",
+                 interpret=str(bool(interpret)).lower()).inc()
     nlev = words.shape[0]
     w = (n + 31) // 32
     sw = _rank_build.STEP_WORDS
@@ -120,6 +130,8 @@ def wm_level_step_fused(sub: jax.Array, shift: int, n: int,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="wm_level_step_fused",
+                 interpret=str(bool(interpret)).lower()).inc()
     blk = _wm_level.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     pad_val = jnp.uint32(1) << jnp.uint32(shift)
@@ -145,6 +157,8 @@ def wt_level_step_fused(sub: jax.Array, nid: jax.Array, shift: int,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="wt_level_step_fused",
+                 interpret=str(bool(interpret)).lower()).inc()
     blk = _wt_level.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     # padding: bit 0 + nid nbkt//2 -> key == nbkt, the sentinel bucket
@@ -170,6 +184,8 @@ def radix_rank(digits: jax.Array, num_buckets: int,
     assert num_buckets <= _radix_rank.MAX_BUCKETS
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="radix_rank",
+                 interpret=str(bool(interpret)).lower()).inc()
     n = digits.shape[0]
     blk = _radix_rank.BLOCK
     npad = ((n + blk - 1) // blk) * blk
@@ -221,6 +237,8 @@ def wm_quantile_batch(wm, lo: jax.Array, hi: jax.Array, k: jax.Array,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="wm_quantile_batch",
+                 interpret=str(bool(interpret)).lower()).inc()
     lo = jnp.atleast_1d(jnp.asarray(lo, jnp.int32))
     hi = jnp.atleast_1d(jnp.asarray(hi, jnp.int32))
     k = jnp.atleast_1d(jnp.asarray(k, jnp.int32))
@@ -256,6 +274,8 @@ def wm_quantile_sharded_batch(shards, shard_bits: int, n: int,
     """
     if interpret is None:
         interpret = _default_interpret()
+    _obs.counter("kernels.trace", op="wm_quantile_sharded_batch",
+                 interpret=str(bool(interpret)).lower()).inc()
     lo = jnp.atleast_1d(jnp.asarray(lo, jnp.int32))
     hi = jnp.atleast_1d(jnp.asarray(hi, jnp.int32))
     k = jnp.atleast_1d(jnp.asarray(k, jnp.int32))

@@ -4,6 +4,8 @@ corpus and serve a batched mixed query stream with per-op reporting.
 PYTHONPATH=src python -m repro.launch.analytics --smoke
 PYTHONPATH=src python -m repro.launch.analytics --n 524288 --vocab 4096 \
     --shard-bits 14 --queries 1024
+PYTHONPATH=src python -m repro.launch.analytics --smoke --metrics-dir /tmp/m
+PYTHONPATH=src python -m repro.launch.obs /tmp/m     # then inspect
 
 Build: wavelet-matrix shards via the paper's τ-chunked construction
 (pmap/vmap over the mesh when devices allow — ``data.shard_build``).
@@ -11,16 +13,21 @@ Serve: each op is one jitted function vmapped over the query batch and
 fanned across shards; a 1024-query mixed stream compiles each op once
 (shapes are static) and reports per-op latency + queries/s. A sample of
 every op is verified against numpy on the regenerated raw stream.
+
+``--metrics-dir`` captures the run through ``repro.obs``: per-op
+``serve.analytics.*`` latency histograms / q/s / compile cost, build and
+restore spans, path-selection counters, and a JSONL event log — rendered
+by ``repro.launch.obs``.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.analytics import (build_sharded_analytics, load_analytics,
                              save_analytics, snapshot_meta)
 from repro.data import make_corpus
@@ -39,15 +46,6 @@ def make_queries(n: int, num: int, seed: int):
     return lo, hi, k
 
 
-def _time_op(fn, *args):
-    t0 = time.perf_counter()
-    jax.block_until_ready(fn(*args))
-    t_compile = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = jax.block_until_ready(fn(*args))
-    return out, time.perf_counter() - t0, t_compile
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -64,7 +62,12 @@ def main():
                     help="persisted analytics snapshot: restore from here "
                          "when present (skipping the build), else build "
                          "and save here")
+    ap.add_argument("--metrics-dir", type=str, default=None,
+                    help="export obs metrics snapshot + JSONL events here "
+                         "(inspect with `python -m repro.launch.obs`)")
     args = ap.parse_args()
+    if args.metrics_dir:
+        obs.configure(args.metrics_dir)
     if args.smoke:
         args.n = min(args.n, 1 << 14)
         args.vocab = min(args.vocab, 512)
@@ -74,7 +77,7 @@ def main():
     toks = np.asarray(make_corpus(args.n, args.vocab, seed=args.seed),
                       np.int64)
 
-    t0 = time.perf_counter()
+    sw = obs.Stopwatch()
     restored = False
     save_snapshot = bool(args.snapshot_dir)
     if args.snapshot_dir:
@@ -109,14 +112,19 @@ def main():
                   f"{e}) — rebuilding from source")
     if not restored:
         from repro.robust import with_retry
-        eng = with_retry(
-            lambda: build_sharded_analytics(toks, args.vocab,
-                                            shard_bits=args.shard_bits),
-            retries=2, backoff_s=0.1,
-            on_retry=lambda a, e: print(
-                f"build attempt {a + 1} failed ({e}) — retrying"))
+        with obs.span("analytics.build", n=args.n, vocab=args.vocab,
+                      shard_bits=args.shard_bits) as sp:
+            eng = sp.sync(with_retry(
+                lambda: build_sharded_analytics(toks, args.vocab,
+                                                shard_bits=args.shard_bits),
+                retries=2, backoff_s=0.1,
+                on_retry=lambda a, e: print(
+                    f"build attempt {a + 1} failed ({e}) — retrying")))
     jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
-    t_build = time.perf_counter() - t0
+    t_build = sw.lap()
+    obs.gauge("serve.analytics.build_s").set(t_build)
+    obs.gauge("serve.analytics.tokens_per_s").set(args.n / max(t_build,
+                                                               1e-9))
     verb = "restore" if restored else "build"
     print(f"{verb}: {args.n} tokens, vocab {args.vocab}, "
           f"{eng.num_shards} shards of {eng.shard_size} in {t_build:.2f}s "
@@ -133,9 +141,10 @@ def main():
     sym_lo = jnp.asarray(lo % args.vocab, jnp.int32)
     sym_hi = jnp.minimum(sym_lo + 64, args.vocab)
     B = args.queries
+    obs.gauge("serve.analytics.coverage").set(float(eng.coverage(0, args.n)))
 
     mesh_ctx = set_mesh(make_host_mesh())
-    with mesh_ctx:
+    with mesh_ctx, obs.span("analytics.serve", queries=B):
         ops = {
             "quantile": (jax.jit(lambda e, a, b, c: e.range_quantile(a, b, c)),
                          (eng, loj, hij, kj)),
@@ -149,7 +158,8 @@ def main():
         }
         results = {}
         for name, (fn, fargs) in ops.items():
-            out, t, t_c = _time_op(fn, *fargs)
+            out, t, t_c = obs.timed_op("analytics", name, fn, *fargs,
+                                       batch=B)
             results[name] = out
             print(f"{name}: {B} queries in {t * 1e3:.1f} ms "
                   f"({B / t:.0f} q/s; compile {t_c:.2f}s)")
@@ -179,6 +189,9 @@ def main():
     if bad:
         raise SystemExit(f"{bad} verification failures")
     print(f"verified {nv} samples of each op against numpy ✓")
+    if args.metrics_dir:
+        obs.write_snapshot()
+        print(f"metrics → {args.metrics_dir}")
 
 
 if __name__ == "__main__":

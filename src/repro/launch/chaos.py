@@ -34,6 +34,7 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro import obs
 from repro.analytics import load_analytics, save_analytics
 from repro.analytics.engine import build_sharded_analytics
 from repro.data import make_corpus
@@ -53,6 +54,10 @@ class Check:
 
     def record(self, name: str, ok: bool, detail: str = ""):
         self.rows.append((name, ok, detail))
+        obs.counter("chaos.scenario",
+                    outcome="pass" if ok else "fail").inc()
+        obs.event("scenario", scenario=name, ok=ok,
+                  detail=detail or None)
         mark = "PASS" if ok else "FAIL"
         print(f"  [{mark}] {name}" + (f" — {detail}" if detail else ""))
 
@@ -81,36 +86,42 @@ def run_snapshot_scenarios(eng, snap_dir: Path, seed: int, check: Check):
     k = np.asarray([3, 100, 7], np.int32)
 
     # -- clean restore ----------------------------------------------------
-    _fresh_snapshot(eng, snap_dir, seed)
-    restored = load_analytics(snap_dir)
-    check.record("clean restore bit-identical",
-                 trees_identical(restored.shards, eng.shards))
+    with obs.span("chaos.scenario", scenario="clean_restore"):
+        _fresh_snapshot(eng, snap_dir, seed)
+        restored = load_analytics(snap_dir)
+        check.record("clean restore bit-identical",
+                     trees_identical(restored.shards, eng.shards))
 
     # -- derived-leaf corruption: detected + repaired bit-identically -----
     for frag in ("superblock", "block", "sel1/sample", "sel0/sample",
                  "zeros"):
-        _fresh_snapshot(eng, snap_dir, seed)
-        where = corrupt_snapshot_leaf(snap_dir, seed=seed, leaf_match=frag)
-        try:
-            healed = load_analytics(snap_dir)
-            ok = (trees_identical(healed.shards, eng.shards)
-                  and _queries_match(healed, eng, lo, hi, k))
-            check.record(f"derived corruption repaired [{frag}]", ok, where)
-        except IntegrityError as e:
-            check.record(f"derived corruption repaired [{frag}]", False,
-                         f"unexpected {e}")
+        with obs.span("chaos.scenario", scenario="derived_corruption",
+                      leaf=frag):
+            _fresh_snapshot(eng, snap_dir, seed)
+            where = corrupt_snapshot_leaf(snap_dir, seed=seed,
+                                          leaf_match=frag)
+            try:
+                healed = load_analytics(snap_dir)
+                ok = (trees_identical(healed.shards, eng.shards)
+                      and _queries_match(healed, eng, lo, hi, k))
+                check.record(f"derived corruption repaired [{frag}]", ok,
+                             where)
+            except IntegrityError as e:
+                check.record(f"derived corruption repaired [{frag}]", False,
+                             f"unexpected {e}")
 
     # -- primary corruption: detected, classified, rebuild signalled ------
-    _fresh_snapshot(eng, snap_dir, seed)
-    where = corrupt_snapshot_leaf(snap_dir, seed=seed,
-                                  leaf_match="bitvectors/rank/words")
-    try:
-        load_analytics(snap_dir)
-        check.record("primary corruption raises", False,
-                     "corrupt bitmap restored without error")
-    except IntegrityError as e:
-        check.record("primary corruption raises", "primary" in str(e),
-                     where)
+    with obs.span("chaos.scenario", scenario="primary_corruption"):
+        _fresh_snapshot(eng, snap_dir, seed)
+        where = corrupt_snapshot_leaf(snap_dir, seed=seed,
+                                      leaf_match="bitvectors/rank/words")
+        try:
+            load_analytics(snap_dir)
+            check.record("primary corruption raises", False,
+                         "corrupt bitmap restored without error")
+        except IntegrityError as e:
+            check.record("primary corruption raises", "primary" in str(e),
+                         where)
 
     # -- truncated npz: step skipped, restore falls back ------------------
     _fresh_snapshot(eng, snap_dir, seed)
@@ -214,7 +225,14 @@ def main():
     ap.add_argument("--dir", type=str, default=None,
                     help="scratch directory for snapshot faults "
                          "(default: a fresh tempdir)")
+    ap.add_argument("--metrics-dir", type=str, default=None,
+                    help="export obs metrics + the correlated "
+                         "injection→detection→repair span tree here "
+                         "(inspect with `python -m repro.launch.obs "
+                         "<dir> --tree`)")
     args = ap.parse_args()
+    if args.metrics_dir:
+        obs.configure(args.metrics_dir)
 
     toks = np.asarray(make_corpus(args.n, args.vocab, seed=args.seed),
                       np.int64)
@@ -230,16 +248,22 @@ def main():
     check = Check()
     try:
         print("snapshot fault injection:")
-        run_snapshot_scenarios(eng, snap_dir, args.seed, check)
+        with obs.span("chaos.snapshot"):
+            run_snapshot_scenarios(eng, snap_dir, args.seed, check)
         print("in-memory fault injection:")
-        run_memory_scenarios(eng, args.seed, check)
+        with obs.span("chaos.memory"):
+            run_memory_scenarios(eng, args.seed, check)
         print("text-index fault injection:")
-        run_index_scenarios(args.seed, check)
+        with obs.span("chaos.index"):
+            run_index_scenarios(args.seed, check)
     finally:
         if not args.dir:
             shutil.rmtree(scratch, ignore_errors=True)
 
     total = len(check.rows)
+    if args.metrics_dir:
+        obs.write_snapshot()
+        print(f"metrics → {args.metrics_dir}")
     if check.failures:
         raise SystemExit(
             f"chaos: {check.failures}/{total} scenarios FAILED")

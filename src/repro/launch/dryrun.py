@@ -10,13 +10,13 @@ os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
 import argparse          # noqa: E402
 import json              # noqa: E402
 import re                # noqa: E402
-import time              # noqa: E402
 from pathlib import Path  # noqa: E402
 
 import jax               # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import obs    # noqa: E402
 from repro.configs.base import (ARCHITECTURES, SHAPES, get_config,  # noqa: E402
                                 supports_shape)
 from repro.launch.mesh import (dp_axes, make_production_mesh,  # noqa: E402
@@ -230,7 +230,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     pshard = _named(mesh, pspecs)
     specs = input_specs(cfg, shape)
 
-    t0 = time.time()
+    sw = obs.Stopwatch()
     mesh_ctx = set_mesh(mesh)
     mesh_ctx.__enter__()
     if shape.kind == "train":
@@ -272,7 +272,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             donate_argnums=(2,))
         lowered = fn.lower(abstract_params(cfg), specs["tokens"],
                            specs["cache"], specs["pos"])
-    t_lower = time.time() - t0
+    t_lower = sw.lap()
 
     analyzed = _analyze_compiled(lowered, save_hlo)
     mesh_ctx.__exit__(None, None, None)
@@ -309,9 +309,9 @@ def abstract_opt_state_specs(pspecs):
 # --------------------------------------------------------------------------
 
 def _analyze_compiled(lowered, save_hlo: Path | None = None) -> dict:
-    t0 = time.time()
+    sw = obs.Stopwatch()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = sw.lap()
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
     if isinstance(cost, (list, tuple)):    # older jax returns [dict]
@@ -354,19 +354,19 @@ def run_analytics_cell(out_dir: Path, save_hlo: bool = False) -> dict:
     serve = jax.jit(lambda e, a, b, c, x, y: (
         e.range_quantile(a, b, c), e.range_count(a, b, x, y),
         e.range_topk(a, b, 8), e.range_distinct(a, b)))
-    t0 = time.time()
+    sw = obs.Stopwatch()
     lowered = serve.lower(eng, lo, hi, k, s0, s1)
     cell_serve = _analyze_compiled(
         lowered, out_dir / "analytics__serve.hlo.txt" if save_hlo else None)
-    cell_serve["lower_s"] = round(time.time() - t0, 1)
+    cell_serve["lower_s"] = round(sw.lap(), 1)
 
     kern = jax.jit(lambda w, a, b, c: wm_quantile_batch(w, a, b, c))
-    t0 = time.time()
+    sw.lap()
     lowered = kern.lower(eng.shard(0), lo, hi, k)
     cell_kernel = _analyze_compiled(
         lowered,
         out_dir / "analytics__quantile_kernel.hlo.txt" if save_hlo else None)
-    cell_kernel["lower_s"] = round(time.time() - t0, 1)
+    cell_kernel["lower_s"] = round(sw.lap(), 1)
 
     result = {
         "cell": "analytics", "ok": True,

@@ -17,12 +17,12 @@ substring search on the regenerated raw stream.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data import make_corpus
 from repro.index import build_sharded_index, sample_patterns
 
@@ -96,7 +96,12 @@ def main():
                          "degraded-mode demo: serves surviving shards with "
                          "an explicit coverage fraction and count bounds")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-dir", type=str, default=None,
+                    help="export obs metrics snapshot + JSONL events here "
+                         "(inspect with `python -m repro.launch.obs`)")
     args = ap.parse_args()
+    if args.metrics_dir:
+        obs.configure(args.metrics_dir)
     if args.smoke:
         args.n = min(args.n, 1 << 14)
         args.shard_bits = min(args.shard_bits, 11)
@@ -105,11 +110,15 @@ def main():
     toks = make_corpus(args.n, args.vocab, seed=args.seed)
     toks = np.asarray(toks, np.int64)
 
-    t0 = time.perf_counter()
-    idx = build_sharded_index(toks, args.vocab, shard_bits=args.shard_bits,
-                              sample_rate=args.sample_rate)
+    sw = obs.Stopwatch()
+    with obs.span("index.build", n=args.n, vocab=args.vocab,
+                  shard_bits=args.shard_bits) as sp:
+        idx = sp.sync(build_sharded_index(toks, args.vocab,
+                                          shard_bits=args.shard_bits,
+                                          sample_rate=args.sample_rate))
     jax.block_until_ready(jax.tree.leaves(idx.shards)[0])
-    t_build = time.perf_counter() - t0
+    t_build = sw.lap()
+    obs.gauge("serve.index.build_s").set(t_build)
     print(f"build: {args.n} tokens, vocab {args.vocab}, "
           f"{idx.num_shards} shards of {idx.shard_size} in {t_build:.2f}s "
           f"({args.n / t_build / 1e3:.0f} ktok/s, "
@@ -120,12 +129,9 @@ def main():
     pj, lj = jnp.asarray(pats), jnp.asarray(lens)
 
     count = jax.jit(lambda ix, p, l: ix.count(p, l))
-    t0 = time.perf_counter()
-    counts = np.asarray(count(idx, pj, lj))
-    t_compile = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    np.asarray(count(idx, pj, lj))
-    t_query = time.perf_counter() - t0
+    out, t_query, t_compile = obs.timed_op("index", "count", count,
+                                           idx, pj, lj, batch=args.patterns)
+    counts = np.asarray(out)
     print(f"count: {args.patterns} patterns in {t_query * 1e3:.1f} ms "
           f"({args.patterns / t_query:.0f} patterns/s; "
           f"compile {t_compile:.2f}s); hits: "
@@ -133,10 +139,11 @@ def main():
           f"max {counts.max()}")
 
     locate = jax.jit(lambda ix, p, l: ix.locate(p, l, 4))
-    t0 = time.perf_counter()
-    pos = np.asarray(locate(idx, pj, lj))
+    pos, _, t_loc = obs.timed_op("index", "locate", locate, idx, pj, lj,
+                                 batch=args.patterns)
+    pos = np.asarray(pos)
     print(f"locate: {args.patterns} patterns × ≤{4 * idx.num_shards} hits "
-          f"in {time.perf_counter() - t0:.2f}s (incl. compile)")
+          f"in {t_loc:.2f}s (incl. compile)")
 
     bad = 0
     stitch_max = min(idx.seam_overlap + 1, idx.shard_size)
@@ -166,10 +173,13 @@ def main():
                              f"[0, {idx.num_shards})")
         deg = idx.drop_shards(np.asarray(drop, np.int32))
         cov = float(deg.coverage())
+        obs.gauge("serve.index.coverage").set(cov)
         print(f"degraded mode: dropped shards {drop} "
               f"({cov * 100:.1f}% coverage)")
         bounds = jax.jit(lambda ix, p, l: ix.count_bounds(p, l))
-        lower, upper, _ = bounds(deg, pj, lj)
+        (lower, upper, _), _, _ = obs.timed_op(
+            "index", "count_bounds", bounds, deg, pj, lj,
+            batch=args.patterns)
         lower, upper = np.asarray(lower), np.asarray(upper)
         avail = np.ones(idx.num_shards, bool)
         avail[drop] = False
@@ -193,6 +203,10 @@ def main():
             raise SystemExit(f"{bad} degraded-mode verification failures")
         print(f"degraded counts verified against surviving-shard oracle; "
               f"bounds bracket the full-corpus truth ✓")
+
+    if args.metrics_dir:
+        obs.write_snapshot()
+        print(f"metrics → {args.metrics_dir}")
 
 
 if __name__ == "__main__":

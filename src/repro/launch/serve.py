@@ -11,12 +11,12 @@ to fresh init rather than serving silently corrupted weights.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import get_config
 from repro.data import make_corpus
 from repro.models.model import build_model, zero_cache
@@ -62,7 +62,12 @@ def main():
                     help="params checkpoint: verified restore when "
                          "present, fresh init (saved here) otherwise")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--metrics-dir", type=str, default=None,
+                    help="export obs metrics snapshot + JSONL events here "
+                         "(inspect with `python -m repro.launch.obs`)")
     args = ap.parse_args()
+    if args.metrics_dir:
+        obs.configure(args.metrics_dir)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -80,10 +85,12 @@ def main():
 
     # ---- prefill: batch forward, last-position logits --------------------
     prefill = jax.jit(lambda p, t: model.prefill(p, t, extras))
-    t0 = time.time()
+    sw = obs.Stopwatch()
     logits = prefill(params, prompts)
     logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t_prefill = sw.lap()
+    obs.histogram("serve.model.prefill.latency_s").observe(t_prefill)
+    obs.gauge("serve.model.prefill.batch").set(b)
     print(f"prefill: {b}×{args.prompt_len} tokens in {t_prefill*1e3:.1f} ms "
           f"({b*args.prompt_len/t_prefill:.0f} tok/s)")
 
@@ -98,7 +105,7 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
-    t0 = time.time()
+    sw.lap()
     for s in range(args.decode_steps - 1):
         pos = jnp.full((b,), args.prompt_len + s, jnp.int32)
         logits, cache = decode(params, tok, cache, pos)
@@ -111,11 +118,18 @@ def main():
         tok = tok.astype(jnp.int32)
         out.append(tok)
     jax.block_until_ready(out[-1])
-    t_dec = time.time() - t0
+    t_dec = sw.lap()
+    obs.histogram("serve.model.decode.latency_s").observe(t_dec)
+    obs.gauge("serve.model.decode.batch").set(b)
+    obs.gauge("serve.model.decode.qps").set(
+        b * (args.decode_steps - 1) / max(t_dec, 1e-9))
     gen = np.concatenate([np.asarray(t) for t in out], axis=1)
     print(f"decode: {b}×{args.decode_steps} tokens in {t_dec*1e3:.1f} ms "
           f"({b*(args.decode_steps-1)/max(t_dec,1e-9):.0f} tok/s)")
     print("sample token ids:", gen[0, :16].tolist())
+    if args.metrics_dir:
+        obs.write_snapshot()
+        print(f"metrics → {args.metrics_dir}")
 
 
 if __name__ == "__main__":

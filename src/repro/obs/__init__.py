@@ -1,0 +1,46 @@
+"""Unified telemetry layer: metrics, trace spans, path-selection counters,
+exporters and SLO reporting — the substrate every serving PR reports
+through (ROADMAP item 2).
+
+Zero-dependency inside the repo (imports nothing from ``repro.*``), so
+``core``/``kernels``/``robust``/``analytics``/``index``/``launch`` can all
+instrument themselves without cycles.
+
+* :mod:`repro.obs.metrics` — process-global registry of counters, gauges
+  and streaming log-bucket histograms; true no-ops when disabled.
+* :mod:`repro.obs.spans`   — nested ``span()`` context manager forwarding
+  to ``jax.profiler.TraceAnnotation``/``named_scope``.
+* :mod:`repro.obs.timing`  — ``time_compiled``/``timed_op`` (the one timer
+  the CLIs and benchmarks share; compile_s separated from steady-state)
+  and ``track_shapes`` jit-recompile tracking.
+* :mod:`repro.obs.export`  — JSONL event log + snapshot (+ Prometheus
+  text) behind the CLIs' ``--metrics-dir``.
+* :mod:`repro.obs.report`  — snapshot → per-op SLO table + span tree
+  (rendered by ``python -m repro.launch.obs``).
+
+Counter semantics under jit: Python-side increments fire at *trace* time,
+so path-selection counters (``core.build``, ``analytics.path``, …) count
+traced decisions, not per-call volume — exactly what "which path actually
+executed / compiled" needs. Per-call volume lives in the ``serve.*``
+family recorded by the CLIs around jitted calls.
+"""
+from .export import (configure, emit_event, metrics_dir, prometheus_text,
+                     read_events, read_snapshot, snapshot_dict,
+                     write_snapshot)
+from .metrics import (REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
+                      counter, disable, disabled, enable, enabled, gauge,
+                      histogram, parse_key)
+from .spans import current_span, event, span
+from .timing import (Stopwatch, reset_shape_tracking, time_compiled,
+                     timed_op, track_shapes)
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "counter", "gauge", "histogram", "parse_key",
+    "enable", "disable", "disabled", "enabled",
+    "span", "current_span", "event",
+    "Stopwatch", "time_compiled", "timed_op", "track_shapes",
+    "reset_shape_tracking",
+    "configure", "metrics_dir", "emit_event", "write_snapshot",
+    "snapshot_dict", "read_snapshot", "read_events", "prometheus_text",
+]

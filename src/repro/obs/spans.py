@@ -1,0 +1,124 @@
+"""Nested trace spans: host-side timing that lines up with device profiles.
+
+``span("restore.verify", shards=8)`` times a block, nests (a thread-local
+stack gives every span a ``/``-joined path), records the duration into the
+``span.<name>`` histogram, appends a structured event to the JSONL event
+log when an exporter is configured, and forwards the name to
+``jax.profiler.TraceAnnotation`` + ``jax.named_scope`` so the same block
+shows up in device profiles under the same label.
+
+Async dispatch makes naive host timing lie: a jitted call returns before
+the device finishes. ``sp.sync(out)`` registers the call's output, and the
+span blocks on it (``jax.block_until_ready``) at exit *before* reading the
+clock — opt-in, because blocking inside a pipelined serving loop would
+serialize it.
+
+When metrics are disabled the context manager yields a shared no-op span
+and touches nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+import time
+import uuid
+
+from . import export as _export
+from .metrics import _state, histogram
+
+_tls = threading.local()
+
+
+def _stack():
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+class Span:
+    __slots__ = ("name", "path", "attrs", "t0", "ts", "dur_s", "span_id",
+                 "parent_id", "_sync")
+
+    def __init__(self, name: str, path: str, attrs: dict,
+                 parent_id: str | None):
+        self.name = name
+        self.path = path
+        self.attrs = attrs
+        self.span_id = uuid.uuid4().hex[:12]
+        self.parent_id = parent_id
+        self.ts = time.time()
+        self.t0 = time.perf_counter()
+        self.dur_s = None
+        self._sync = None
+
+    def set(self, key: str, value) -> None:
+        """Attach an attribute discovered mid-span (exported at exit)."""
+        self.attrs[key] = value
+
+    def sync(self, value):
+        """Register device work to block on at span exit; returns it."""
+        self._sync = value
+        return value
+
+
+class _NullSpan:
+    """Disabled-mode stand-in: every method is a no-op."""
+    __slots__ = ()
+
+    def set(self, key, value):
+        pass
+
+    def sync(self, value):
+        return value
+
+
+_NULL = _NullSpan()
+
+
+def current_span() -> Span | None:
+    st = _stack()
+    return st[-1] if st else None
+
+
+def event(name: str, kind: str = "event", **attrs) -> None:
+    """Emit a structured event correlated to the currently open span (the
+    fault-injection hook: a fault fired inside a chaos scenario's span
+    shows up inside that span's subtree)."""
+    if not _state.enabled:
+        return
+    sp = current_span()
+    _export.emit_event(kind, name,
+                       span_id=sp.span_id if sp is not None else None,
+                       attrs=attrs or None)
+
+
+@contextlib.contextmanager
+def span(name: str, **attrs):
+    """Context manager timing a nested, attributed span (see module doc)."""
+    if not _state.enabled:
+        yield _NULL
+        return
+    import jax
+    st = _stack()
+    parent = st[-1] if st else None
+    path = f"{parent.path}/{name}" if parent else name
+    sp = Span(name, path, dict(attrs),
+              parent.span_id if parent else None)
+    st.append(sp)
+    try:
+        with jax.profiler.TraceAnnotation(name), jax.named_scope(name):
+            yield sp
+    finally:
+        if sp._sync is not None:
+            try:
+                jax.block_until_ready(sp._sync)
+            except Exception:                                 # noqa: BLE001
+                pass    # a failed computation still ends the span
+        sp.dur_s = time.perf_counter() - sp.t0
+        st.pop()
+        histogram("span." + name).observe(sp.dur_s)
+        _export.emit_event("span", name, ts=sp.ts, dur_s=sp.dur_s,
+                           path=sp.path, span_id=sp.span_id,
+                           parent_id=sp.parent_id,
+                           attrs=sp.attrs or None)

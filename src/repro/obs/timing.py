@@ -1,0 +1,122 @@
+"""Timing helpers deduplicating the stack's hand-rolled timers, plus
+jit-recompile tracking keyed by (op, input shapes).
+
+``time_compiled`` is THE timer: first call timed separately (compile +
+first run — what jit actually costs a cold serving process), then
+``iters`` steady-state calls with ``block_until_ready``, median reported.
+``launch/analytics``'s ``_timed``, ``launch/index``'s inline pairs and
+``benchmarks/common.time_fn`` all collapse onto it.
+
+``timed_op`` wraps one serving-op execution into the standard per-op
+metric family::
+
+    serve.<layer>.<op>.latency_s   histogram (steady-state seconds)
+    serve.<layer>.<op>.compile_s   gauge     (first-call cost)
+    serve.<layer>.<op>.qps         gauge     (batch / steady seconds)
+    serve.<layer>.<op>.batch       gauge
+    serve.<layer>.<op>.calls       counter
+
+``track_shapes`` counts *distinct input-shape signatures* per op — every
+new signature is a jit retrace/recompile on a shape-polymorphic serving
+path, which is exactly the signal the future pad-and-bucket request
+coalescer needs (ROADMAP item 2): a high ``jit.shapes``-to-traffic ratio
+means ragged batches are shredding the compile cache.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Tuple
+
+from .metrics import _state, counter, gauge, histogram
+
+
+class Stopwatch:
+    """Tiny perf_counter wrapper so call sites need no ad-hoc ``time``
+    arithmetic (the launch/ lint bans raw perf_counter there)."""
+
+    def __init__(self):
+        self.t0 = time.perf_counter()
+
+    def lap(self) -> float:
+        """Seconds since construction or the previous ``lap``."""
+        now = time.perf_counter()
+        dt = now - self.t0
+        self.t0 = now
+        return dt
+
+
+def time_compiled(fn: Callable, *args, iters: int = 1,
+                  block=None) -> Tuple[object, float, float]:
+    """Run ``fn(*args)`` once (timed: compile + first run), then ``iters``
+    steady-state repeats; returns ``(out, steady_s, compile_s)`` with
+    ``steady_s`` the median. ``block`` overrides what to block on (for
+    functions whose output is host data already)."""
+    import jax
+
+    def _wait(out):
+        jax.block_until_ready(out if block is None else block(out))
+        return out
+
+    sw = Stopwatch()
+    out = _wait(fn(*args))
+    compile_s = sw.lap()
+    ts = []
+    for _ in range(max(1, iters)):
+        sw.lap()
+        out = _wait(fn(*args))
+        ts.append(sw.lap())
+    ts.sort()
+    return out, ts[len(ts) // 2], compile_s
+
+
+def timed_op(layer: str, op: str, fn: Callable, *args, batch: int = 1,
+             iters: int = 1):
+    """One instrumented serving-op execution (see module doc for the
+    metric family). Returns ``(out, steady_s, compile_s)``."""
+    prefix = f"serve.{layer}.{op}"
+    out, steady_s, compile_s = time_compiled(fn, *args, iters=iters)
+    track_shapes(f"{layer}.{op}", *args)
+    counter(prefix + ".calls").inc(1 + max(1, iters))
+    histogram(prefix + ".latency_s").observe(steady_s)
+    gauge(prefix + ".compile_s").set(compile_s)
+    gauge(prefix + ".batch").set(batch)
+    if steady_s > 0:
+        gauge(prefix + ".qps").set(batch / steady_s)
+    return out, steady_s, compile_s
+
+
+_shape_lock = threading.Lock()
+_seen_shapes: dict[str, set] = {}
+
+
+def _signature(x) -> tuple:
+    shape = getattr(x, "shape", None)
+    if shape is not None:
+        return (tuple(shape), str(getattr(x, "dtype", "?")))
+    return ("py", type(x).__name__)
+
+
+def track_shapes(op: str, *args) -> bool:
+    """Record the shape signature of one call to ``op``; returns True (and
+    bumps ``jit.shapes{op=...}`` + ``jit.recompile``) when it is new.
+    Counts leaves through pytrees, so engine/index handles work too."""
+    if not _state.enabled:
+        return False
+    import jax
+    sig = tuple(_signature(l) for a in args for l in jax.tree.leaves(a))
+    with _shape_lock:
+        seen = _seen_shapes.setdefault(op, set())
+        new = sig not in seen
+        if new:
+            seen.add(sig)
+    counter("jit.calls", op=op).inc()
+    if new:
+        counter("jit.shapes", op=op).inc()
+        counter("jit.recompile").inc()
+    return new
+
+
+def reset_shape_tracking() -> None:
+    with _shape_lock:
+        _seen_shapes.clear()

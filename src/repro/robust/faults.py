@@ -28,6 +28,8 @@ from typing import Any, Callable, Optional, Sequence, Tuple
 import jax
 import numpy as np
 
+from repro import obs
+
 _SEP = "/"
 
 
@@ -86,6 +88,9 @@ def flip_leaf_bit(tree: Any, *, seed: int,
     new_leaf, where = _flip_bit_in_array(leaves[pick], rng)
     leaves = list(leaves)
     leaves[pick] = jax.numpy.asarray(new_leaf)
+    obs.counter("robust.fault", kind="leaf_bitflip").inc()
+    obs.event("fault.leaf_bitflip", kind="fault", leaf=key, where=where,
+              seed=seed)
     return (jax.tree_util.tree_unflatten(treedef, leaves),
             f"{key}: {where}")
 
@@ -120,6 +125,9 @@ def corrupt_snapshot_leaf(ckpt_dir: str | Path, *, seed: int,
     key = keys[int(rng.integers(0, len(keys)))]
     arrays[key], where = _flip_bit_in_array(arrays[key], rng)
     np.savez(d / "arrays.npz", **arrays)
+    obs.counter("robust.fault", kind="snapshot_bitflip").inc()
+    obs.event("fault.snapshot_bitflip", kind="fault", leaf=key, where=where,
+              seed=seed, step_dir=d.name)
     return f"{key}: {where}"
 
 
@@ -131,6 +139,9 @@ def truncate_file(ckpt_dir: str | Path, name: str = "arrays.npz",
     size = path.stat().st_size
     with open(path, "r+b") as f:
         f.truncate(max(1, int(size * keep_frac)))
+    obs.counter("robust.fault", kind="truncate").inc()
+    obs.event("fault.truncate", kind="fault", file=str(path),
+              keep_frac=keep_frac)
     return path
 
 
@@ -138,6 +149,8 @@ def delete_file(ckpt_dir: str | Path, name: str = "meta.json") -> Path:
     """Delete one file of the newest snapshot step (half-deleted dir)."""
     d = _latest_step_dir(ckpt_dir)
     (d / name).unlink()
+    obs.counter("robust.fault", kind="delete_file").inc()
+    obs.event("fault.delete_file", kind="fault", file=str(d / name))
     return d / name
 
 
@@ -145,6 +158,8 @@ def delete_step(ckpt_dir: str | Path) -> Path:
     """Remove the newest step directory entirely."""
     d = _latest_step_dir(ckpt_dir)
     shutil.rmtree(d)
+    obs.counter("robust.fault", kind="delete_step").inc()
+    obs.event("fault.delete_step", kind="fault", step_dir=str(d))
     return d
 
 
@@ -159,6 +174,9 @@ def inject_partial_tmp(ckpt_dir: str | Path, step: int = 99) -> Path:
     bare = ckpt_dir / f"step_{step:08d}"
     bare.mkdir(exist_ok=True)
     (bare / "meta.json").write_text(json.dumps({"step": step}))
+    obs.counter("robust.fault", kind="partial_tmp").inc()
+    obs.event("fault.partial_tmp", kind="fault", tmp=str(tmp),
+              bare=str(bare))
     return tmp
 
 
@@ -182,7 +200,10 @@ def with_retry(fn: Callable, *, retries: int = 2, backoff_s: float = 0.05,
         except tuple(exceptions) as e:          # noqa: PERF203
             last = e
             if attempt == retries:
+                obs.counter("robust.retry_exhausted").inc()
                 raise
+            obs.counter("robust.retry").inc()
+            obs.event("retry", attempt=attempt, error=type(e).__name__)
             if on_retry is not None:
                 on_retry(attempt, e)
             time.sleep(backoff_s * (2 ** attempt))

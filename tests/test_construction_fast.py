@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.core.wavelet_matrix import (build_wavelet_matrix,
                                        build_wavelet_matrix_levelwise)
 
@@ -93,6 +94,45 @@ def test_queries_on_fused_build():
     ks = np.arange(min(8, len(occ)))
     s = np.asarray(wm_select(wm, jnp.full(len(ks), c), jnp.asarray(ks)))
     assert np.array_equal(s, occ[ks])
+
+
+def test_path_selection_counters():
+    """Every build advertises its chosen path through ``core.*`` counters:
+    fused vs scatter at the builder level, kernel vs xla per level step."""
+    obs.REGISTRY.reset()
+    rng = np.random.default_rng(13)
+    seq = jnp.asarray(rng.integers(0, 256, 400).astype(np.uint32))
+    build_wavelet_matrix(seq, 256, sample_rate=128, use_kernels=False)
+    build_wavelet_matrix(seq, 256, sample_rate=128, fused=False)
+    snap = obs.REGISTRY.snapshot()["counters"]
+    assert snap["core.build{builder=wm,path=fused}"] == 1
+    assert snap["core.build{builder=wm,path=scatter}"] == 1
+    # sigma=256 → 8 levels, all stepped on the XLA impl
+    assert snap["core.level_step{builder=wm,impl=xla}"] == 8
+    assert "core.level_step{builder=wm,impl=kernel}" not in snap
+
+    obs.REGISTRY.reset()
+    build_wavelet_matrix(seq, 256, sample_rate=128, use_kernels=True)
+    snap = obs.REGISTRY.snapshot()["counters"]
+    assert snap["core.level_step{builder=wm,impl=kernel}"] == 8
+    traces = {k: v for k, v in snap.items() if k.startswith("kernels.trace")}
+    assert any("op=wm_level_step_fused" in k for k in traces)
+
+
+def test_path_counters_fire_at_trace_time():
+    """Under jit the Python-side counters fire once per trace, not once
+    per call — steady-state serving stays zero-overhead by construction."""
+    import functools
+    obs.REGISTRY.reset()
+    rng = np.random.default_rng(17)
+    seq = jnp.asarray(rng.integers(0, 64, 256).astype(np.uint32))
+    build = jax.jit(functools.partial(build_wavelet_matrix, sigma=64,
+                                      sample_rate=128, use_kernels=False))
+    jax.block_until_ready(build(seq).zeros)
+    jax.block_until_ready(build(seq).zeros)     # cache hit: no new trace
+    snap = obs.REGISTRY.snapshot()["counters"]
+    assert snap["core.build{builder=wm,path=fused}"] == 1
+    assert snap["core.level_step{builder=wm,impl=xla}"] == 6
 
 
 def test_shard_build_jit_loop_matches():

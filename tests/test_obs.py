@@ -1,0 +1,275 @@
+"""Telemetry layer contract tests.
+
+* histogram quantiles vs the numpy nearest-rank oracle across
+  distributions (exact inside the raw-sample head, bucket-bounded beyond)
+* counter/gauge thread-safety under concurrent writers and under
+  vmapped shard builds (trace-time increments must not corrupt state)
+* disabled mode is a true no-op (no state mutation, no export)
+* span nesting, attribute propagation, and event correlation
+* exporter round trip: snapshot + JSONL events, Prometheus text
+* timed_op emits the full ``serve.*`` metric family; track_shapes counts
+  distinct signatures once
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.metrics import Histogram
+
+bucket_index = Histogram.bucket_index
+from repro.obs.report import check_slos, op_rows, render_span_tree
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    obs.REGISTRY.reset()
+    obs.reset_shape_tracking()
+    yield
+    obs.REGISTRY.reset()
+
+
+# -------------------------------------------------------------------------
+# histogram quantiles
+# -------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dist", ["uniform", "lognormal", "exponential",
+                                  "bimodal"])
+def test_quantiles_exact_within_raw_head(dist):
+    """With count ≤ raw_cap the quantiles are exact nearest-rank order
+    statistics — identical to numpy's inverted_cdf method."""
+    rng = np.random.default_rng(hash(dist) % (1 << 31))
+    n = 5000
+    xs = {
+        "uniform": rng.uniform(1e-6, 10.0, n),
+        "lognormal": rng.lognormal(-7, 2.5, n),
+        "exponential": rng.exponential(0.01, n),
+        "bimodal": np.concatenate([rng.normal(1e-4, 1e-5, n // 2),
+                                   rng.normal(5.0, 0.5, n - n // 2)]),
+    }[dist]
+    xs = np.abs(xs) + 1e-9
+    h = obs.histogram("t.q", dist=dist)
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.5, 0.9, 0.95, 0.99, 1.0):
+        want = float(np.quantile(xs, q, method="inverted_cdf"))
+        assert h.quantile(q) == pytest.approx(want, rel=1e-12), (dist, q)
+    assert h.count == len(xs)
+    assert h.max == pytest.approx(xs.max())
+    assert h.min == pytest.approx(xs.min())
+    assert h.sum == pytest.approx(xs.sum())
+
+
+def test_quantiles_bucket_fallback_beyond_cap():
+    """Past raw_cap the quantile comes from the log buckets: within one
+    bucket's relative width (2^(1/16) ≈ 4.4%) of the true value."""
+    rng = np.random.default_rng(7)
+    xs = np.abs(rng.lognormal(-5, 2, 30000)) + 1e-9
+    h = Histogram("t.big", raw_cap=1024)
+    for x in xs:
+        h.observe(float(x))
+    assert h.count > h.raw_cap
+    for q in (0.5, 0.95, 0.99):
+        want = float(np.quantile(xs, q, method="inverted_cdf"))
+        assert h.quantile(q) == pytest.approx(want, rel=0.05), q
+
+
+def test_bucket_index_monotone():
+    vals = np.logspace(-8, 5, 400)
+    idx = [bucket_index(float(v)) for v in vals]
+    assert idx == sorted(idx)
+    assert bucket_index(0.0) == 0                      # underflow bucket
+    assert bucket_index(1e9) == bucket_index(1e8)      # overflow bucket
+
+
+# -------------------------------------------------------------------------
+# thread safety
+# -------------------------------------------------------------------------
+
+def test_counter_thread_safety():
+    c = obs.counter("t.threads")
+    h = obs.histogram("t.threads_h")
+    N, T = 2000, 8
+
+    def work():
+        for _ in range(N):
+            c.inc()
+            h.observe(0.001)
+
+    ts = [threading.Thread(target=work) for _ in range(T)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert c.value == N * T
+    assert h.count == N * T
+
+
+def test_counters_under_vmap_shard_builds():
+    """Trace-time counter increments from inside vmapped/jitted builds
+    must leave the registry consistent (and count traces, not calls)."""
+    from repro.core.wavelet_matrix import build_wavelet_matrix
+    rng = np.random.default_rng(3)
+    shards = jnp.asarray(rng.integers(0, 64, (4, 256)).astype(np.uint32))
+
+    def build(s):
+        return build_wavelet_matrix(s, 64, sample_rate=128,
+                                    use_kernels=False)
+
+    jax.vmap(build)(shards)
+    snap = obs.REGISTRY.snapshot()
+    builds = {k: v for k, v in snap["counters"].items()
+              if k.startswith("core.build")}
+    # one vmapped build = ONE trace of the builder
+    assert sum(builds.values()) == 1
+    key = "core.build{builder=wm,path=fused}"
+    assert builds.get(key) == 1
+
+
+# -------------------------------------------------------------------------
+# disabled mode
+# -------------------------------------------------------------------------
+
+def test_disabled_mode_is_noop():
+    c = obs.counter("t.off")
+    h = obs.histogram("t.off_h")
+    g = obs.gauge("t.off_g")
+    with obs.disabled():
+        c.inc(5)
+        h.observe(1.0)
+        g.set(3.0)
+        with obs.span("t.off_span") as sp:
+            sp.set("k", "v")        # must not blow up on the null span
+            assert sp.sync(42) == 42
+        obs.event("t.off_event")
+    assert c.value == 0
+    assert h.count == 0
+    assert g.value is None
+    assert "span.t.off_span" not in obs.REGISTRY.snapshot()["histograms"]
+
+
+def test_disabled_mode_histogram_state_frozen():
+    h = obs.histogram("t.frozen")
+    h.observe(1.0)
+    before = (h.count, h.sum, h.min, h.max)
+    with obs.disabled():
+        for _ in range(100):
+            h.observe(9.0)
+    assert (h.count, h.sum, h.min, h.max) == before
+
+
+# -------------------------------------------------------------------------
+# spans
+# -------------------------------------------------------------------------
+
+def test_span_nesting_and_attrs():
+    with obs.span("outer", a=1) as so:
+        assert obs.current_span() is so
+        assert so.path == "outer"
+        with obs.span("inner") as si:
+            assert si.parent_id == so.span_id
+            assert si.path == "outer/inner"
+            si.set("found", "late")
+        assert obs.current_span() is so
+    assert obs.current_span() is None
+    assert si.attrs["found"] == "late"
+    assert so.dur_s >= si.dur_s
+    snap = obs.REGISTRY.snapshot()
+    assert snap["histograms"]["span.outer"]["count"] == 1
+    assert snap["histograms"]["span.inner"]["count"] == 1
+
+
+def test_span_sync_blocks_on_device_value():
+    with obs.span("jitted") as sp:
+        out = sp.sync(jnp.arange(8) * 2)
+    assert sp.dur_s is not None
+    assert int(np.asarray(out)[-1]) == 14
+
+
+# -------------------------------------------------------------------------
+# export + report
+# -------------------------------------------------------------------------
+
+def test_export_roundtrip_and_span_tree(tmp_path):
+    obs.configure(tmp_path)
+    try:
+        with obs.span("load"):
+            with obs.span("verify"):
+                obs.event("fault.test", kind="fault", leaf="rank/words")
+        obs.timed_op("analytics", "quantile",
+                     lambda x: jnp.sum(x), jnp.arange(100), batch=100)
+        obs.write_snapshot()
+    finally:
+        obs.configure(None)
+
+    snap = obs.read_snapshot(tmp_path)
+    assert "serve.analytics.quantile.latency_s" in snap["histograms"]
+    assert snap["meta"]["jax_version"] == jax.__version__
+
+    events = obs.read_events(tmp_path)
+    kinds = {e["kind"] for e in events}
+    assert {"span", "fault"} <= kinds
+    tree = render_span_tree(events)
+    lines = tree.splitlines()
+    assert lines[0].startswith("load")
+    assert any("verify" in ln for ln in lines)
+    # the fault event is nested under the verify span, deeper than it
+    fault_ln = next(ln for ln in lines if "fault.test" in ln)
+    verify_ln = next(ln for ln in lines if ln.lstrip().startswith("verify"))
+    assert (len(fault_ln) - len(fault_ln.lstrip())
+            > len(verify_ln) - len(verify_ln.lstrip()))
+
+    rows = op_rows(snap)
+    assert [r.op for r in rows] == ["analytics.quantile"]
+    assert rows[0].batch == 100
+    ok = check_slos(rows, ["analytics.*:p99_ms<=60000"])
+    assert ok and all(r.ok for r in ok)
+    bad = check_slos(rows, ["analytics.*:qps>=1e18"])
+    assert any(not r.ok for r in bad)
+    missing = check_slos(rows, ["nosuch.*:p99_ms<=1"])
+    assert any(not r.ok for r in missing)   # no-match = violation
+
+    prom = obs.prometheus_text(snap)
+    assert "serve_analytics_quantile_latency_s" in prom.replace(".", "_")
+
+
+def test_jsonl_skips_torn_lines(tmp_path):
+    obs.configure(tmp_path)
+    try:
+        obs.event("fine")
+    finally:
+        obs.configure(None)
+    with open(tmp_path / "events.jsonl", "a") as f:
+        f.write('{"ts": 1, "kind": "event", "name": "torn...')
+    events = obs.read_events(tmp_path)
+    assert [e["name"] for e in events] == ["fine"]
+
+
+def test_timed_op_metric_family():
+    obs.timed_op("index", "count", lambda x: x + 1, jnp.arange(16),
+                 batch=16, iters=2)
+    snap = obs.REGISTRY.snapshot()
+    assert snap["histograms"]["serve.index.count.latency_s"]["count"] == 1
+    assert snap["gauges"]["serve.index.count.batch"] == 16
+    assert snap["gauges"]["serve.index.count.compile_s"] > 0
+    assert snap["counters"]["serve.index.count.calls"] == 3
+    assert snap["counters"]["jit.shapes{op=index.count}"] == 1
+
+
+def test_track_shapes_counts_distinct_signatures():
+    assert obs.track_shapes("op", jnp.zeros((4,))) is True
+    assert obs.track_shapes("op", jnp.zeros((4,))) is False
+    assert obs.track_shapes("op", jnp.zeros((8,))) is True
+    assert obs.track_shapes("op", jnp.zeros((8,), jnp.int32)) is True
+    snap = obs.REGISTRY.snapshot()
+    assert snap["counters"]["jit.shapes{op=op}"] == 3
+    assert snap["counters"]["jit.calls{op=op}"] == 4
+
+
+def test_key_roundtrip():
+    c = obs.counter("a.b", z="1", a="2")
+    assert c.key == "a.b{a=2,z=1}"          # labels sorted
+    name, labels = obs.parse_key(c.key)
+    assert name == "a.b" and labels == {"a": "2", "z": "1"}
