@@ -1,12 +1,11 @@
 """End-to-end compressed corpus store: ingest rate, size, serving rate."""
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.data import TokenBatcher, build_compressed_corpus, make_corpus
 
 from .common import record, save, time_fn
@@ -16,10 +15,10 @@ def run(n: int = 1 << 21, out: list | None = None) -> list:
     rows = out if out is not None else []
     for vocab in (50280, 151936):
         toks = make_corpus(n, vocab, seed=0)
-        t0 = time.perf_counter()
+        sw = obs.Stopwatch()
         corpus = build_compressed_corpus(toks, vocab, shard_bits=18)
         jax.block_until_ready(jax.tree.leaves(corpus.shards)[0])
-        t_ing = time.perf_counter() - t0
+        t_ing = sw.lap()
         record(rows, f"corpus_ingest_v{vocab}_n{n}", t_ing,
                mtok_per_s=round(n / t_ing / 1e6, 2),
                bits_per_token=round(corpus.bits_per_token(), 2),
@@ -33,10 +32,10 @@ def run(n: int = 1 << 21, out: list | None = None) -> list:
                mtok_per_s=round(pos.shape[0] / t / 1e6, 2))
 
         batcher = TokenBatcher(corpus=corpus, batch=8, seq_len=1024, seed=0)
-        t0 = time.perf_counter()
-        for s in range(3):
-            batcher.batch_at(s)
-        t_b = (time.perf_counter() - t0) / 3
+        sw = obs.Stopwatch()
+        for step in range(3):
+            batcher.batch_at(step)
+        t_b = sw.lap() / 3
         record(rows, f"corpus_batcher_8x1024_v{vocab}", t_b,
                mtok_per_s=round(8 * 1025 / t_b / 1e6, 2))
     if out is None:

@@ -11,13 +11,13 @@ from __future__ import annotations
 
 import shutil
 import tempfile
-import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.analytics import build_sharded_analytics, load_analytics, \
     save_analytics
 from repro.data import make_corpus
@@ -29,11 +29,12 @@ from .common import record, save, time_fn
 
 def _median_restore_s(directory, iters: int = 3, **kwargs) -> float:
     ts = []
+    sw = obs.Stopwatch()
     for _ in range(iters):
-        t0 = time.perf_counter()
+        sw.lap()
         eng = load_analytics(directory, **kwargs)
         jax.block_until_ready(jax.tree.leaves(eng.shards)[0])
-        ts.append(time.perf_counter() - t0)
+        ts.append(sw.lap())
     ts.sort()
     return ts[len(ts) // 2]
 
@@ -48,9 +49,9 @@ def run(n: int = 1 << 18, out: list | None = None) -> list:
     scratch = Path(tempfile.mkdtemp(prefix="bench_robust_"))
     try:
         snap = scratch / "snapshot"
-        t0 = time.perf_counter()
+        sw = obs.Stopwatch()
         save_analytics(eng, snap, extra_meta={"corpus_seed": 0})
-        t_save = time.perf_counter() - t0
+        t_save = sw.lap()
         record(rows, f"snapshot_save_n{n}", t_save,
                mb=round(sum(leaf.size * leaf.dtype.itemsize for leaf in
                             jax.tree.leaves(eng.shards)) / 2**20, 1))
@@ -65,25 +66,25 @@ def run(n: int = 1 << 18, out: list | None = None) -> list:
                within_10pct_budget=bool(overhead_pct <= 10.0))
 
         # --- incident paths: structural verify, checksum repair ----------
-        t0 = time.perf_counter()
+        sw.lap()
         report = verify_analytics(eng)
-        t_structural = time.perf_counter() - t0
+        t_structural = sw.lap()
         record(rows, f"structural_verify_n{n}", t_structural,
                ok=report.ok, violations=len(report.violations))
 
-        t0 = time.perf_counter()
+        sw.lap()
         healed = repair_analytics(eng)
         jax.block_until_ready(jax.tree.leaves(healed.shards)[0])
-        t_repair = time.perf_counter() - t0
+        t_repair = sw.lap()
         record(rows, f"repair_all_shards_n{n}", t_repair,
                num_shards=eng.num_shards)
 
         # --- detect + repair round trip on a corrupted snapshot ----------
         corrupt_snapshot_leaf(snap, seed=1, leaf_match="superblock")
-        t0 = time.perf_counter()
+        sw.lap()
         healed = load_analytics(snap)
         jax.block_until_ready(jax.tree.leaves(healed.shards)[0])
-        t_heal = time.perf_counter() - t0
+        t_heal = sw.lap()
         record(rows, f"restore_detect_repair_n{n}", t_heal,
                x_clean_restore=round(t_heal / max(t_verified, 1e-9), 1))
     finally:

@@ -8,6 +8,7 @@ cost: trace + lower + compile + run) from the steady-state median that
 from __future__ import annotations
 
 import json
+import platform
 import subprocess
 import time
 from pathlib import Path
@@ -16,6 +17,7 @@ from typing import Callable, Tuple
 import jax
 
 from repro import obs
+from repro.obs.history import HISTORY_FILE, append_history
 
 RESULTS_DIR = Path(__file__).resolve().parent.parent / "results" / "bench"
 
@@ -43,6 +45,7 @@ def run_meta(seed: int = BENCH_SEED) -> dict:
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "device_count": jax.local_device_count(),
+        "host": platform.node() or "unknown",
         "seed": int(seed),
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
     }
@@ -72,18 +75,44 @@ def record(rows: list, name: str, seconds: float, **derived) -> dict:
     return row
 
 
+def suite_of(fname: str) -> Tuple[str, bool]:
+    """(suite, fast) derived from a bench artifact name —
+    ``"robust.fast.json"`` → ``("robust", True)``."""
+    stem = fname
+    fast = stem.endswith(".fast.json")
+    for suffix in (".fast.json", ".json"):
+        if stem.endswith(suffix):
+            stem = stem[: -len(suffix)]
+            break
+    return stem, fast
+
+
 def save(rows: list, fname: str, seed: int = BENCH_SEED,
          extra_meta: dict | None = None) -> Path:
     """Persist ``{"meta": provenance, "rows": rows}`` under results/bench/,
     creating the directory tree on first run. The meta block (git commit,
     jax version, RNG seed, …) makes every artifact self-describing —
-    ``extra_meta`` extends it (e.g. ``{"fast": True}``). numpy scalars in
-    derived fields serialize as plain floats."""
+    ``extra_meta`` extends it (e.g. ``{"fast": True}``); ``suite`` and
+    ``fast`` are stamped uniformly from ``fname``. numpy scalars in
+    derived fields serialize as plain floats.
+
+    Every save also appends one record per row to the per-commit
+    trajectory ``results/bench/history.jsonl`` (append-only; the JSON
+    artifact is the latest snapshot, the history is what
+    ``repro.launch.regress`` gates on).
+    """
     path = RESULTS_DIR / fname
     path.parent.mkdir(parents=True, exist_ok=True)
+    suite, fast = suite_of(fname)
     meta = run_meta(seed)
+    meta["suite"] = suite
+    meta["fast"] = fast
     if extra_meta:
         meta.update(extra_meta)
     path.write_text(json.dumps({"meta": meta, "rows": rows},
                                indent=1, default=float))
+    try:
+        append_history(RESULTS_DIR / HISTORY_FILE, suite, rows, meta)
+    except OSError as e:
+        print(f"WARNING: could not append bench history: {e}", flush=True)
     return path

@@ -30,12 +30,12 @@ from pathlib import Path
 import jax
 
 from repro.configs.base import ARCHITECTURES, SHAPES, get_config
-from repro.launch.hlo_analysis import analyze_hlo
 from repro.models.model import count_params
+from repro.obs.prof import HW_MODELS, LINK_BW, analyze_hlo
 
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # B/s / chip
-LINK_BW = 50e9               # B/s / ICI link
+# hardware model now lives in repro.obs.prof (shared with the runtime
+# roofline gauges); this table is always priced for the TPU part.
+PEAK_FLOPS, HBM_BW = HW_MODELS["tpu"]
 
 DRYRUN_DIR = Path(__file__).resolve().parent.parent / "results" / "dryrun"
 

@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import time
+
+from repro import obs
 
 from . import (bench_analytics, bench_construction, bench_corpus_store,
                bench_huffman, bench_index, bench_kernels, bench_multiary,
@@ -76,7 +77,7 @@ def main() -> None:
     args = ap.parse_args()
 
     todo = {args.only: SUITES[args.only]} if args.only else SUITES
-    t0 = time.time()
+    sw = obs.Stopwatch()
     for key, (fname, fn) in todo.items():
         print(f"== {key} ==", flush=True)
         # pass `out` so the suite never self-saves under its default name
@@ -88,14 +89,17 @@ def main() -> None:
         rows = fn(**kwargs)
         save(rows, fname, extra_meta={"fast": True} if args.fast else None)
     if args.fast:
-        stale = stale_full_runs(todo, run_meta()["git_commit"])
+        # staleness is a repo-wide property: check EVERY registered suite,
+        # not just the ones this invocation ran — a suite with no full-size
+        # JSON at all must warn even under `--only`
+        stale = stale_full_runs(SUITES, run_meta()["git_commit"])
         for key, reason in stale:
             print(f"WARNING: [{key}] {reason}")
         if stale:
             print(f"({len(stale)} suite(s) have no up-to-date full-size "
                   f"run — run `python -m benchmarks.run` without --fast "
                   f"to refresh the trajectory)")
-    print(f"total {time.time() - t0:.1f}s")
+    print(f"total {sw.total():.1f}s")
 
 
 if __name__ == "__main__":

@@ -18,15 +18,15 @@ python -m repro.launch.index --smoke
 echo "== range analytics smoke =="
 python -m repro.launch.analytics --smoke
 
-# telemetry: the launch layer must time through repro.obs (Stopwatch /
-# time_compiled / timed_op) — a raw perf_counter there bypasses the
-# metrics the SLO gate reads
+# telemetry: the launch layer AND the benchmarks must time through
+# repro.obs (Stopwatch / time_compiled / timed_op) — a raw perf_counter
+# there bypasses the metrics the SLO gate and the bench history read
 echo "== obs time-source lint =="
-if grep -rn "time\.perf_counter\|time\.time(" src/repro/launch/; then
-    echo "FAIL: raw time.* call in src/repro/launch/ — use repro.obs timers"
+if grep -rn "time\.perf_counter\|time\.time(" src/repro/launch/ benchmarks/; then
+    echo "FAIL: raw time.* call in src/repro/launch/ or benchmarks/ — use repro.obs timers"
     exit 1
 fi
-echo "launch layer timing goes through repro.obs ✓"
+echo "launch + benchmarks timing goes through repro.obs ✓"
 
 # end-to-end metrics pipeline: serve with --metrics-dir, then validate
 # the exported snapshot/JSONL (per-op latency histograms with nonzero
@@ -79,6 +79,22 @@ python -m repro.launch.chaos --smoke
 # in construction.json is never clobbered by CI-sized runs.)
 echo "== construction fast-path smoke =="
 python -m benchmarks.run --only construction --fast
+
+# perf regression sentry: every benchmarks.run appends one record per
+# (suite, row) to results/bench/history.jsonl; the regress CLI compares
+# the latest run against a median-of-last-K same-host baseline with a
+# MAD-scaled threshold. Soft gate: only CONFIRMED step regressions fail
+# (noise-absorbing by design; --rel-floor 0.5 adds CI slack on top of the
+# CLI's 0.25 default), and a missing/too-new history passes.
+echo "== perf regression gate (fast records) =="
+REGRESS_RC=0
+python -m repro.launch.regress --fast --rel-floor 0.5 || REGRESS_RC=$?
+if [[ "$REGRESS_RC" == "1" ]]; then
+    echo "FAIL: confirmed perf regression vs bench history"
+    exit 1
+elif [[ "$REGRESS_RC" != "0" ]]; then
+    echo "(no usable bench history yet — regression gate skipped)"
+fi
 
 echo "== fused tree-family equality smoke =="
 python - <<'PY'

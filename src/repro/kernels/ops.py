@@ -25,6 +25,18 @@ def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _work_gauges(op: str, elements: int, bits: int | None = None) -> None:
+    """Trace-time work counters: problem size per kernel launch.
+
+    Shapes are static under jit, so these record the size of the *traced*
+    launch (the same semantics as the ``kernels.trace`` counters). The
+    profiling layer divides them by measured steady-state time to derive
+    Melem/s (``prof.melem_per_s``)."""
+    _obs.gauge("kernels.work.elements", op=op).set(float(elements))
+    if bits is not None:
+        _obs.gauge("kernels.work.bits", op=op).set(float(bits))
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def bitpack(bits: jax.Array, interpret: bool | None = None) -> jax.Array:
     """Pack a (n,) 0/1 vector into ceil(n/32) uint32 words (LSB-first)."""
@@ -33,6 +45,7 @@ def bitpack(bits: jax.Array, interpret: bool | None = None) -> jax.Array:
     _obs.counter("kernels.trace", op="bitpack",
                  interpret=str(bool(interpret)).lower()).inc()
     n = bits.shape[0]
+    _work_gauges("bitpack", n, bits=n)
     w = (n + 31) // 32
     wpad = ((w + _bitpack.LANES - 1) // _bitpack.LANES) * _bitpack.LANES
     flat = jnp.zeros((wpad * 32,), jnp.int32).at[:n].set(bits.astype(jnp.int32))
@@ -54,6 +67,7 @@ def rank_build(words: jax.Array, n: int,
         interpret = _default_interpret()
     _obs.counter("kernels.trace", op="rank_build",
                  interpret=str(bool(interpret)).lower()).inc()
+    _work_gauges("rank_build", n, bits=n)
     w = (n + 31) // 32
     sw = _rank_build.STEP_WORDS
     wpad = ((w + sw - 1) // sw) * sw
@@ -78,6 +92,7 @@ def wm_level_step(sub: jax.Array, shift: int, n: int,
         interpret = _default_interpret()
     _obs.counter("kernels.trace", op="wm_level_step",
                  interpret=str(bool(interpret)).lower()).inc()
+    _work_gauges("wm_level_step", n, bits=n)
     blk = _wm_level.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     # pad with all-ones keys: they partition past n and are trimmed
@@ -108,6 +123,7 @@ def rank_build_levels(words: jax.Array, n: int,
     _obs.counter("kernels.trace", op="rank_build_levels",
                  interpret=str(bool(interpret)).lower()).inc()
     nlev = words.shape[0]
+    _work_gauges("rank_build_levels", nlev * n, bits=nlev * n)
     w = (n + 31) // 32
     sw = _rank_build.STEP_WORDS
     wpad = ((w + sw - 1) // sw) * sw
@@ -132,6 +148,7 @@ def wm_level_step_fused(sub: jax.Array, shift: int, n: int,
         interpret = _default_interpret()
     _obs.counter("kernels.trace", op="wm_level_step_fused",
                  interpret=str(bool(interpret)).lower()).inc()
+    _work_gauges("wm_level_step_fused", n, bits=n)
     blk = _wm_level.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     pad_val = jnp.uint32(1) << jnp.uint32(shift)
@@ -159,6 +176,7 @@ def wt_level_step_fused(sub: jax.Array, nid: jax.Array, shift: int,
         interpret = _default_interpret()
     _obs.counter("kernels.trace", op="wt_level_step_fused",
                  interpret=str(bool(interpret)).lower()).inc()
+    _work_gauges("wt_level_step_fused", n, bits=n)
     blk = _wt_level.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     # padding: bit 0 + nid nbkt//2 -> key == nbkt, the sentinel bucket
@@ -187,6 +205,7 @@ def radix_rank(digits: jax.Array, num_buckets: int,
     _obs.counter("kernels.trace", op="radix_rank",
                  interpret=str(bool(interpret)).lower()).inc()
     n = digits.shape[0]
+    _work_gauges("radix_rank", n)
     blk = _radix_rank.BLOCK
     npad = ((n + blk - 1) // blk) * blk
     d = jnp.full((1, npad), num_buckets, jnp.int32).at[0, :n].set(
@@ -243,6 +262,7 @@ def wm_quantile_batch(wm, lo: jax.Array, hi: jax.Array, k: jax.Array,
     hi = jnp.atleast_1d(jnp.asarray(hi, jnp.int32))
     k = jnp.atleast_1d(jnp.asarray(k, jnp.int32))
     q = lo.shape[0]
+    _work_gauges("wm_quantile_batch", q)
     qpad = ((q + _wm_quantile.QBLOCK - 1)
             // _wm_quantile.QBLOCK) * _wm_quantile.QBLOCK
     queries = jnp.zeros((3, qpad), jnp.int32)
@@ -280,6 +300,7 @@ def wm_quantile_sharded_batch(shards, shard_bits: int, n: int,
     hi = jnp.atleast_1d(jnp.asarray(hi, jnp.int32))
     k = jnp.atleast_1d(jnp.asarray(k, jnp.int32))
     q = lo.shape[0]
+    _work_gauges("wm_quantile_sharded_batch", q)
     qpad = ((q + _wm_quantile.QBLOCK - 1)
             // _wm_quantile.QBLOCK) * _wm_quantile.QBLOCK
     queries = jnp.zeros((3, qpad), jnp.int32)

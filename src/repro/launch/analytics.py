@@ -17,7 +17,11 @@ every op is verified against numpy on the regenerated raw stream.
 ``--metrics-dir`` captures the run through ``repro.obs``: per-op
 ``serve.analytics.*`` latency histograms / q/s / compile cost, build and
 restore spans, path-selection counters, and a JSONL event log — rendered
-by ``repro.launch.obs``.
+by ``repro.launch.obs``. Serving ops additionally run under
+``obs.profiled_op``, so the snapshot carries the ``prof.*`` cost-model
+gauges (FLOPs, bytes, roofline utilization, peak working set) per op;
+``--profile-dir`` wraps the serving section in a ``jax.profiler`` device
+trace.
 """
 from __future__ import annotations
 
@@ -65,6 +69,9 @@ def main():
     ap.add_argument("--metrics-dir", type=str, default=None,
                     help="export obs metrics snapshot + JSONL events here "
                          "(inspect with `python -m repro.launch.obs`)")
+    ap.add_argument("--profile-dir", type=str, default=None,
+                    help="capture a jax.profiler device trace of the "
+                         "serving section into this directory")
     args = ap.parse_args()
     if args.metrics_dir:
         obs.configure(args.metrics_dir)
@@ -143,8 +150,29 @@ def main():
     B = args.queries
     obs.gauge("serve.analytics.coverage").set(float(eng.coverage(0, args.n)))
 
+    # cost-model profile of the construction path (one shard-sized build)
+    # and the Pallas kernel descent, so the snapshot relates build/serve
+    # time to the hardware roofline alongside the serving ops below
+    from repro.core.wavelet_matrix import build_wavelet_matrix
+    shard0 = jnp.asarray(toks[:eng.shard_size], jnp.int32)
+    _, cstats = obs.profile_op(
+        "analytics.construct_shard",
+        lambda s: build_wavelet_matrix(s, eng.sigma),
+        shard0, work_elements=float(eng.shard_size))
+    if "roofline_util" in cstats:
+        print(f"construct_shard: roofline {cstats['roofline_util']:.1%} "
+              f"({cstats.get('bound', '?')}-bound)")
+    nk = min(16, B)
+    _, kstats = obs.profile_op(
+        "analytics.quantile_kernel",
+        lambda e, a, b, c: e.range_quantile(a, b, c, use_kernel=True),
+        eng, loj[:nk], hij[:nk], kj[:nk], work_elements=float(nk))
+    if "error" in kstats:
+        print(f"quantile_kernel profile skipped: {kstats['error']}")
+
     mesh_ctx = set_mesh(make_host_mesh())
-    with mesh_ctx, obs.span("analytics.serve", queries=B):
+    with mesh_ctx, obs.span("analytics.serve", queries=B), \
+            obs.trace(args.profile_dir):
         ops = {
             "quantile": (jax.jit(lambda e, a, b, c: e.range_quantile(a, b, c)),
                          (eng, loj, hij, kj)),
@@ -158,11 +186,13 @@ def main():
         }
         results = {}
         for name, (fn, fargs) in ops.items():
-            out, t, t_c = obs.timed_op("analytics", name, fn, *fargs,
-                                       batch=B)
+            out, t, t_c = obs.profiled_op("analytics", name, fn, *fargs,
+                                          batch=B)
             results[name] = out
             print(f"{name}: {B} queries in {t * 1e3:.1f} ms "
                   f"({B / t:.0f} q/s; compile {t_c:.2f}s)")
+    if args.profile_dir:
+        print(f"device trace → {args.profile_dir}")
 
     bad = 0
     nv = min(args.verify, B)

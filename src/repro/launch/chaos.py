@@ -230,9 +230,13 @@ def main():
                          "injection→detection→repair span tree here "
                          "(inspect with `python -m repro.launch.obs "
                          "<dir> --tree`)")
+    ap.add_argument("--profile-dir", type=str, default=None,
+                    help="capture a jax.profiler device trace of the "
+                         "scenario run into this directory")
     args = ap.parse_args()
     if args.metrics_dir:
         obs.configure(args.metrics_dir)
+    obs.start_trace(args.profile_dir)
 
     toks = np.asarray(make_corpus(args.n, args.vocab, seed=args.seed),
                       np.int64)
@@ -261,6 +265,8 @@ def main():
             shutil.rmtree(scratch, ignore_errors=True)
 
     total = len(check.rows)
+    if obs.stop_trace():
+        print(f"device trace → {args.profile_dir}")
     if args.metrics_dir:
         obs.write_snapshot()
         print(f"metrics → {args.metrics_dir}")

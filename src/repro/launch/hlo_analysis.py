@@ -1,173 +1,15 @@
-"""Post-SPMD HLO analysis: per-device dot FLOPs and collective bytes.
-
-XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, which
-under-reports any scan-over-layers program by ~num_layers×. This module
-re-derives both quantities from ``compiled.as_text()``:
-
-* builds the computation call graph (while bodies via their
-  ``backend_config known_trip_count``, fusions/calls/conditionals with
-  multiplier 1),
-* walks every computation with its execution multiplier,
-* dot FLOPs: 2 × numel(result) × contraction size (operand shapes resolved
-  through a per-computation symbol table),
-* collective bytes: result-shape bytes of every all-gather / all-reduce /
-  reduce-scatter / all-to-all / collective-permute (≈ bytes each device
-  receives per step).
+"""Back-compat shim: the post-SPMD HLO analysis moved into
+``repro.obs.prof`` so the profiling layer (cost-model gauges, roofline
+utilization, the dryrun roofline tables) shares one implementation.
+Import :func:`repro.obs.prof.analyze_hlo` directly in new code.
 """
 from __future__ import annotations
 
-import json
-import re
-from typing import Dict, List, Tuple
+from repro.obs.prof import analyze_hlo, parse_computations  # noqa: F401
 
-_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
-                "bf16": 2, "f16": 2, "u16": 2, "s16": 2,
-                "f32": 4, "s32": 4, "u32": 4,
-                "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16}
-
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
-# computation headers are the only non-indented "%name (" lines (params may
-# contain nested tuple parens, so only anchor on the name)
-_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s+\(")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
-
-
-def _numel(dims: str) -> int:
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n
-
-
-def _first_shape(sig: str) -> Tuple[str, str]:
-    m = _SHAPE_RE.search(sig)
-    return (m.group(1), m.group(2)) if m else ("f32", "")
-
-
-def parse_computations(hlo: str) -> Dict[str, List[str]]:
-    """computation name -> list of instruction lines."""
-    comps: Dict[str, List[str]] = {}
-    cur = None
-    for line in hlo.splitlines():
-        hdr = _COMP_HDR_RE.match(line)
-        if hdr and "{" in line:
-            cur = hdr.group(1)
-            comps[cur] = []
-            continue
-        if line.startswith("}"):
-            cur = None
-            continue
-        if cur is not None and "=" in line:
-            comps[cur].append(line)
-    return comps
-
-
-def _entry_name(hlo: str) -> str:
-    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.M)
-    return m.group(1) if m else next(iter(parse_computations(hlo)))
-
-
-def analyze_hlo(hlo: str) -> Dict:
-    comps = parse_computations(hlo)
-    entry = _entry_name(hlo)
-
-    # ---- per-computation: symbol table + edges + local costs ------------
-    sym: Dict[str, Dict[str, Tuple[str, str]]] = {}
-    edges: Dict[str, List[Tuple[str, int]]] = {}
-    local_flops: Dict[str, float] = {}
-    local_coll: Dict[str, Dict[str, int]] = {}
-
-    for cname, lines in comps.items():
-        table: Dict[str, Tuple[str, str]] = {}
-        cedges: List[Tuple[str, int]] = []
-        flops = 0.0
-        coll: Dict[str, int] = {}
-        for line in lines:
-            mi = _INSTR_RE.match(line)
-            if not mi:
-                continue
-            iname, rest = mi.groups()
-            dt, dims = _first_shape(rest)
-            table[iname] = (dt, dims)
-            # ---- call edges ----
-            if " while(" in rest:
-                mb = re.search(r"body=%?([\w.\-]+)", rest)
-                trip = 1
-                mt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
-                if mt:
-                    trip = int(mt.group(1))
-                if mb:
-                    cedges.append((mb.group(1), trip))
-                mc = re.search(r"condition=%?([\w.\-]+)", rest)
-                if mc:
-                    cedges.append((mc.group(1), trip))
-            for mcall in re.finditer(
-                    r"(?:calls=|to_apply=)%?([\w.\-]+)", rest):
-                cedges.append((mcall.group(1), 1))
-            for mbr in re.finditer(
-                    r"(?:true_computation=|false_computation=|branch_computations=\{)"
-                    r"%?([\w.\-]+)", rest):
-                cedges.append((mbr.group(1), 1))
-            # ---- collectives ----
-            # XLA:CPU's FloatSupport promotes bf16 all-reduces to f32
-            # (reducer named "*promoted"); TPU all-reduces bf16 natively,
-            # so promoted ops are counted at their true 2-byte width.
-            def _cbytes():
-                b = _numel(dims) * _DTYPE_BYTES.get(dt, 4)
-                if dt == "f32" and "promoted" in rest:
-                    b //= 2
-                return b
-
-            for kind in _COLLECTIVES:
-                if f" {kind}(" in rest or rest.startswith(f"{kind}("):
-                    if f"{kind}-start" in rest or f"{kind}-done" in rest:
-                        continue
-                    coll[kind] = coll.get(kind, 0) + _cbytes()
-                    break
-            for kind in _COLLECTIVES:
-                if f" {kind}-start(" in rest:
-                    coll[kind] = coll.get(kind, 0) + _cbytes()
-                    break
-            # ---- dot flops ----
-            if " dot(" in rest:
-                ops = re.findall(r"%([\w.\-]+)", rest)
-                lhs = ops[0] if ops else None
-                mcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", rest)
-                csize = 1
-                if lhs and lhs in table and mcd:
-                    ldims = table[lhs][1].split(",")
-                    for ci in mcd.group(1).split(","):
-                        if ci and int(ci) < len(ldims) and ldims[int(ci)]:
-                            csize *= int(ldims[int(ci)])
-                flops += 2.0 * _numel(dims) * csize
-        sym[cname] = table
-        edges[cname] = cedges
-        local_flops[cname] = flops
-        local_coll[cname] = coll
-
-    # ---- propagate multipliers from entry -------------------------------
-    mult: Dict[str, float] = {}
-
-    def visit(name: str, m: float):
-        mult[name] = mult.get(name, 0.0) + m
-        for child, trip in edges.get(name, ()):  # conditions counted too
-            visit(child, m * trip)
-
-    visit(entry, 1.0)
-
-    total_flops = sum(local_flops.get(c, 0.0) * m for c, m in mult.items())
-    total_coll: Dict[str, float] = {}
-    for c, m in mult.items():
-        for kind, b in local_coll.get(c, {}).items():
-            total_coll[kind] = total_coll.get(kind, 0.0) + b * m
-    return {"dot_flops_per_device": total_flops,
-            "collective_bytes_per_device": total_coll,
-            "num_computations": len(comps)}
-
+__all__ = ["analyze_hlo", "parse_computations"]
 
 if __name__ == "__main__":
+    import json
     import sys
     print(json.dumps(analyze_hlo(open(sys.argv[1]).read()), indent=1))

@@ -99,6 +99,9 @@ def main():
     ap.add_argument("--metrics-dir", type=str, default=None,
                     help="export obs metrics snapshot + JSONL events here "
                          "(inspect with `python -m repro.launch.obs`)")
+    ap.add_argument("--profile-dir", type=str, default=None,
+                    help="capture a jax.profiler device trace of the "
+                         "query section into this directory")
     args = ap.parse_args()
     if args.metrics_dir:
         obs.configure(args.metrics_dir)
@@ -129,14 +132,17 @@ def main():
     pj, lj = jnp.asarray(pats), jnp.asarray(lens)
 
     count = jax.jit(lambda ix, p, l: ix.count(p, l))
-    out, t_query, t_compile = obs.timed_op("index", "count", count,
-                                           idx, pj, lj, batch=args.patterns)
+    with obs.trace(args.profile_dir):
+        out, t_query, t_compile = obs.profiled_op(
+            "index", "count", count, idx, pj, lj, batch=args.patterns)
     counts = np.asarray(out)
     print(f"count: {args.patterns} patterns in {t_query * 1e3:.1f} ms "
           f"({args.patterns / t_query:.0f} patterns/s; "
           f"compile {t_compile:.2f}s); hits: "
           f"min {counts.min()} median {int(np.median(counts))} "
           f"max {counts.max()}")
+    if args.profile_dir:
+        print(f"device trace → {args.profile_dir}")
 
     locate = jax.jit(lambda ix, p, l: ix.locate(p, l, 4))
     pos, _, t_loc = obs.timed_op("index", "locate", locate, idx, pj, lj,

@@ -9,6 +9,12 @@ PYTHONPATH=src python -m repro.launch.obs /tmp/m \
     --slo 'analytics.*:p99_ms<=2000' --slo 'analytics.quantile:qps>=100'
 PYTHONPATH=src python -m repro.launch.obs /tmp/m --tree       # span tree
 PYTHONPATH=src python -m repro.launch.obs /tmp/m --prometheus # text format
+PYTHONPATH=src python -m repro.launch.obs /tmp/m --html /tmp/m/dash.html
+
+``--html`` writes the self-contained dashboard page (SLO table, roofline
+profile, span waterfall, and — with ``--history`` or the default
+``results/bench/history.jsonl`` — per-commit bench-trajectory
+sparklines).
 
 Exit status is nonzero when any ``--slo`` check is violated, so the
 command doubles as a CI gate on serving latency.
@@ -20,8 +26,13 @@ import sys
 from pathlib import Path
 
 from repro.obs import prometheus_text, read_events, read_snapshot
+from repro.obs.history import read_history
+from repro.obs.html import render_html
 from repro.obs.report import check_slos, op_rows, render_span_tree, \
     render_table
+
+DEFAULT_HISTORY = (Path(__file__).resolve().parents[3]
+                   / "results" / "bench" / "history.jsonl")
 
 
 def main(argv=None) -> int:
@@ -41,6 +52,11 @@ def main(argv=None) -> int:
     ap.add_argument("--prometheus", action="store_true",
                     help="print the snapshot in Prometheus text format "
                          "and exit")
+    ap.add_argument("--html", type=Path, default=None, metavar="OUT",
+                    help="write the static HTML dashboard to OUT and exit")
+    ap.add_argument("--history", type=Path, default=DEFAULT_HISTORY,
+                    help="bench history JSONL for the dashboard's "
+                         f"trajectory section (default {DEFAULT_HISTORY})")
     args = ap.parse_args(argv)
 
     try:
@@ -52,6 +68,16 @@ def main(argv=None) -> int:
 
     if args.prometheus:
         print(prometheus_text(snap), end="")
+        return 0
+
+    if args.html is not None:
+        page = render_html(snap=snap,
+                           events=read_events(args.metrics_dir),
+                           history=read_history(args.history),
+                           slo_specs=args.slo or None)
+        args.html.parent.mkdir(parents=True, exist_ok=True)
+        args.html.write_text(page)
+        print(f"wrote {args.html}")
         return 0
 
     rows = op_rows(snap)

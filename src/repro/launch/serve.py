@@ -65,9 +65,13 @@ def main():
     ap.add_argument("--metrics-dir", type=str, default=None,
                     help="export obs metrics snapshot + JSONL events here "
                          "(inspect with `python -m repro.launch.obs`)")
+    ap.add_argument("--profile-dir", type=str, default=None,
+                    help="capture a jax.profiler device trace of "
+                         "prefill+decode into this directory")
     args = ap.parse_args()
     if args.metrics_dir:
         obs.configure(args.metrics_dir)
+    obs.start_trace(args.profile_dir)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     model = build_model(cfg)
@@ -127,6 +131,9 @@ def main():
     print(f"decode: {b}×{args.decode_steps} tokens in {t_dec*1e3:.1f} ms "
           f"({b*(args.decode_steps-1)/max(t_dec,1e-9):.0f} tok/s)")
     print("sample token ids:", gen[0, :16].tolist())
+    obs.record_memory_gauges()
+    if obs.stop_trace():
+        print(f"device trace → {args.profile_dir}")
     if args.metrics_dir:
         obs.write_snapshot()
         print(f"metrics → {args.metrics_dir}")

@@ -17,6 +17,15 @@ instrument themselves without cycles.
   text) behind the CLIs' ``--metrics-dir``.
 * :mod:`repro.obs.report`  — snapshot → per-op SLO table + span tree
   (rendered by ``python -m repro.launch.obs``).
+* :mod:`repro.obs.prof`    — device-level profiling: HLO cost-model stats,
+  roofline-utilization and device-memory gauges (``prof.*``), opt-in
+  ``jax.profiler`` trace capture (``--profile-dir``), and the post-SPMD
+  ``analyze_hlo`` (absorbed from ``launch.hlo_analysis``).
+* :mod:`repro.obs.history` — append-only per-commit bench history
+  (``results/bench/history.jsonl``) + noise-aware regression detection
+  behind ``python -m repro.launch.regress``.
+* :mod:`repro.obs.html`    — zero-dependency static HTML dashboard
+  (``python -m repro.launch.obs --html``).
 
 Counter semantics under jit: Python-side increments fire at *trace* time,
 so path-selection counters (``core.build``, ``analytics.path``, …) count
@@ -27,9 +36,15 @@ family recorded by the CLIs around jitted calls.
 from .export import (configure, emit_event, metrics_dir, prometheus_text,
                      read_events, read_snapshot, snapshot_dict,
                      write_snapshot)
+from .history import (append_history, detect_regression, read_history,
+                      regress_report)
+from .html import render_html
 from .metrics import (REGISTRY, Counter, Gauge, Histogram, MetricsRegistry,
                       counter, disable, disabled, enable, enabled, gauge,
                       histogram, parse_key)
+from .prof import (analyze_hlo, hw_model, live_memory_stats, profile_op,
+                   profiled_op, record_memory_gauges, start_trace,
+                   stop_trace, trace)
 from .spans import current_span, event, span
 from .timing import (Stopwatch, reset_shape_tracking, time_compiled,
                      timed_op, track_shapes)
@@ -43,4 +58,9 @@ __all__ = [
     "reset_shape_tracking",
     "configure", "metrics_dir", "emit_event", "write_snapshot",
     "snapshot_dict", "read_snapshot", "read_events", "prometheus_text",
+    "profile_op", "profiled_op", "record_memory_gauges",
+    "live_memory_stats", "hw_model", "analyze_hlo",
+    "start_trace", "stop_trace", "trace",
+    "append_history", "read_history", "detect_regression",
+    "regress_report", "render_html",
 ]

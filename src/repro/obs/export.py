@@ -28,6 +28,7 @@ from __future__ import annotations
 import atexit
 import json
 import os
+import re
 import threading
 import time
 from pathlib import Path
@@ -146,6 +147,25 @@ def read_events(directory: str | Path) -> list[dict]:
     return out
 
 
+#: Prometheus metric names are [a-zA-Z_:][a-zA-Z0-9_:]*; label names drop
+#: the colon. Anything else maps to "_".
+_PROM_NAME_BAD = re.compile(r"[^a-zA-Z0-9_:]")
+_PROM_LABEL_BAD = re.compile(r"[^a-zA-Z0-9_]")
+
+
+def _prom_name(name: str) -> str:
+    name = _PROM_NAME_BAD.sub("_", name)
+    if not name or name[0].isdigit():
+        name = "_" + name
+    return name
+
+
+def _prom_label_value(v: str) -> str:
+    # exposition-format escaping: backslash, double quote, newline
+    return (str(v).replace("\\", r"\\").replace('"', r'\"')
+            .replace("\n", r"\n"))
+
+
 def prometheus_text(snap: dict | None = None) -> str:
     """Render a snapshot in Prometheus exposition format (counters and
     gauges as-is; histograms as _count/_sum + quantile gauges)."""
@@ -154,9 +174,11 @@ def prometheus_text(snap: dict | None = None) -> str:
 
     def fmt(key: str, suffix: str = "") -> str:
         name, labels = parse_key(key)
-        name = name.replace(".", "_").replace("-", "_") + suffix
+        name = _prom_name(name + suffix)
         if labels:
-            inner = ",".join(f'{k}="{v}"' for k, v in sorted(labels.items()))
+            inner = ",".join(
+                f'{_PROM_LABEL_BAD.sub("_", k)}="{_prom_label_value(v)}"'
+                for k, v in sorted(labels.items()))
             return f"{name}{{{inner}}}"
         return name
 

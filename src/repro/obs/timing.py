@@ -37,6 +37,7 @@ class Stopwatch:
 
     def __init__(self):
         self.t0 = time.perf_counter()
+        self._start = self.t0
 
     def lap(self) -> float:
         """Seconds since construction or the previous ``lap``."""
@@ -44,6 +45,10 @@ class Stopwatch:
         dt = now - self.t0
         self.t0 = now
         return dt
+
+    def total(self) -> float:
+        """Seconds since construction (laps don't reset this)."""
+        return time.perf_counter() - self._start
 
 
 def time_compiled(fn: Callable, *args, iters: int = 1,

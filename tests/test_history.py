@@ -1,0 +1,184 @@
+"""Regression-sentry contract tests: history append/read round trip and
+the noise-aware detector against synthetic trajectories.
+
+The detector must gate on a genuine step regression (2× slowdown) while
+NOT gating on: a flat series, a noisy-but-flat series (MAD-scaled slack),
+or a fresh series with too little history. Gradual drift that never trips
+the step test is reported as ``drift`` (not a hard gate), and a large
+speedup as ``improvement``. Cross-host baselines are filtered by default.
+"""
+import json
+
+import pytest
+
+from repro.obs.history import (HISTORY_FILE, append_history,
+                               detect_regression, group_history,
+                               read_history, regress_report)
+from repro.launch.regress import main as regress_main
+
+
+def _meta(commit="c0", host="h1", fast=True, backend="cpu", seed=0):
+    return {"git_commit": commit, "git_dirty": False, "backend": backend,
+            "host": host, "fast": fast, "timestamp": "2026-08-09T00:00:00",
+            "seed": seed}
+
+
+# -------------------------------------------------------------------------
+# detector verdicts on synthetic series
+# -------------------------------------------------------------------------
+
+def test_flat_series_is_ok():
+    assert detect_regression([100.0] * 10).verdict == "ok"
+
+
+def test_noisy_flat_series_is_ok():
+    """±30% jitter around a flat mean must not gate: the MAD-scaled slack
+    grows with the series' own noise."""
+    vals = [100, 128, 84, 117, 92, 109, 78, 122, 95, 118]
+    assert detect_regression([float(v) for v in vals]).verdict == "ok"
+
+
+def test_step_regression_detected():
+    vd = detect_regression([100.0] * 8 + [200.0])
+    assert vd.verdict == "regression"
+    assert vd.baseline == pytest.approx(100.0)
+    assert vd.delta_pct == pytest.approx(100.0)
+    assert vd.threshold is not None and vd.latest > vd.threshold
+
+
+def test_single_noisy_run_does_not_gate_under_own_noise():
+    """A last value within the series' historical spread stays ok even
+    when it is the max seen so far."""
+    vals = [100, 130, 85, 115, 90, 125, 95, 120, 132]
+    assert detect_regression([float(v) for v in vals]).verdict == "ok"
+
+
+def test_gradual_drift_flagged_not_gated():
+    """+7% per run: no single step trips the MAD test, but the recent
+    median vs the oldest window does."""
+    vals = [100.0 * 1.07 ** i for i in range(12)]
+    vd = detect_regression(vals)
+    assert vd.verdict == "drift"
+
+
+def test_improvement_detected():
+    vd = detect_regression([100.0] * 8 + [40.0])
+    assert vd.verdict == "improvement"
+
+
+def test_too_little_history_is_new():
+    vd = detect_regression([100.0, 200.0])
+    assert vd.verdict == "new"
+    vd = detect_regression([500.0])
+    assert vd.verdict == "new"
+
+
+def test_baseline_excludes_latest():
+    # baseline is the *prior* runs: a repeated regression keeps gating
+    # until the window fills with the new level
+    vd = detect_regression([100.0] * 6 + [200.0, 200.0])
+    assert vd.verdict == "regression"
+
+
+# -------------------------------------------------------------------------
+# history file round trip
+# -------------------------------------------------------------------------
+
+def test_append_read_roundtrip(tmp_path):
+    path = tmp_path / HISTORY_FILE
+    rows = [{"name": "build_n65536", "us_per_call": 1234.5,
+             "mtok_per_s": 53.1},
+            {"name": "query_b1024", "us_per_call": 88.0}]
+    recs = append_history(path, "construction", rows, _meta())
+    assert len(recs) == 2
+    got = read_history(path)
+    assert [r["row"] for r in got] == ["build_n65536", "query_b1024"]
+    assert got[0]["suite"] == "construction"
+    assert got[0]["commit"] == "c0" and got[0]["host"] == "h1"
+    assert got[0]["us_per_call"] == pytest.approx(1234.5)
+    assert got[0]["metrics"]["mtok_per_s"] == pytest.approx(53.1)
+    key = group_history(got)
+    assert len(key) == 2               # two distinct rows → two series
+
+
+def test_read_skips_torn_last_line(tmp_path):
+    path = tmp_path / HISTORY_FILE
+    append_history(path, "wt", [{"name": "a", "us_per_call": 1.0}], _meta())
+    with path.open("a") as fh:
+        fh.write('{"suite": "wt", "row": "b", "us_per_call": 2.')
+    got = read_history(path)
+    assert [r["row"] for r in got] == ["a"]
+
+
+def test_read_missing_file(tmp_path):
+    assert read_history(tmp_path / "nope.jsonl") == []
+
+
+# -------------------------------------------------------------------------
+# report grouping / filters
+# -------------------------------------------------------------------------
+
+def _series(path, values, row="build", suite="wt", host="h1", fast=True):
+    for i, v in enumerate(values):
+        append_history(path, suite, [{"name": row, "us_per_call": v}],
+                       _meta(commit=f"c{i}", host=host, fast=fast))
+
+
+def test_regress_report_step(tmp_path):
+    path = tmp_path / HISTORY_FILE
+    _series(path, [100, 101, 99, 100, 100, 210])
+    rows = regress_report(read_history(path))
+    assert len(rows) == 1
+    assert rows[0]["verdict"] == "regression"
+    assert rows[0]["suite"] == "wt" and rows[0]["row"] == "build"
+
+
+def test_cross_host_baseline_filtered_by_default(tmp_path):
+    """A trajectory seeded on a faster machine must read as 'new' on this
+    host, not as a phantom regression."""
+    path = tmp_path / HISTORY_FILE
+    _series(path, [50, 51, 49, 50, 50], host="fastbox")
+    _series(path, [120], host="slowbox")
+    rows = regress_report(read_history(path))
+    assert rows[0]["verdict"] == "new"
+    rows = regress_report(read_history(path), same_host=False)
+    assert rows[0]["verdict"] == "regression"
+
+
+def test_fast_full_series_never_mixed(tmp_path):
+    path = tmp_path / HISTORY_FILE
+    _series(path, [10, 10, 10, 10], fast=True)
+    _series(path, [1000, 1000, 1000, 1000], fast=False)
+    rows = regress_report(read_history(path))
+    assert len(rows) == 2 and all(r["verdict"] == "ok" for r in rows)
+    only_fast = regress_report(read_history(path), fast=True)
+    assert len(only_fast) == 1 and only_fast[0]["fast"] is True
+
+
+# -------------------------------------------------------------------------
+# the CLI gate
+# -------------------------------------------------------------------------
+
+def test_cli_exits_nonzero_on_injected_2x_slowdown(tmp_path, capsys):
+    path = tmp_path / HISTORY_FILE
+    _series(path, [100, 101, 99, 100, 100, 200])
+    assert regress_main(["--history", str(path)]) == 1
+    out = capsys.readouterr()
+    assert "REGRESS" in out.out and "CONFIRMED" in out.err
+
+
+def test_cli_passes_noisy_flat_history(tmp_path):
+    path = tmp_path / HISTORY_FILE
+    _series(path, [100, 128, 84, 117, 92, 109, 122])
+    assert regress_main(["--history", str(path)]) == 0
+
+
+def test_cli_missing_history_is_soft(tmp_path):
+    assert regress_main(["--history", str(tmp_path / "none.jsonl")]) == 2
+
+
+def test_cli_fail_on_none_reports_only(tmp_path):
+    path = tmp_path / HISTORY_FILE
+    _series(path, [100, 100, 100, 100, 400])
+    assert regress_main(["--history", str(path),
+                         "--fail-on", "none"]) == 0

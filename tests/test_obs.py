@@ -273,3 +273,39 @@ def test_key_roundtrip():
     assert c.key == "a.b{a=2,z=1}"          # labels sorted
     name, labels = obs.parse_key(c.key)
     assert name == "a.b" and labels == {"a": "2", "z": "1"}
+
+
+# per https://prometheus.io/docs/instrumenting/exposition_formats/:
+# metric names [a-zA-Z_:][a-zA-Z0-9_:]*, label names [a-zA-Z_][a-zA-Z0-9_]*,
+# label values with \\, \" and \n escaped, sample value a float
+_PROM_LINE = (r'^[a-zA-Z_:][a-zA-Z0-9_:]*'
+              r'(\{[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\\\|\\"|\\n)*"'
+              r'(,[a-zA-Z_][a-zA-Z0-9_]*="(?:[^"\\\n]|\\\\|\\"|\\n)*")*\})?'
+              r' -?[0-9.eE+-]+(\.[0-9]+)?$')
+
+
+def test_prometheus_text_is_valid_exposition_format():
+    """Every emitted line must parse under the exposition-format grammar,
+    including metric names with dots/dashes and label values containing
+    quotes, backslashes and newlines."""
+    import re
+    obs.counter("kernels.trace", op="wm-level_step", interpret="false").inc()
+    obs.counter("prof.bound", op="analytics.quantile", term="memory").inc()
+    obs.gauge("prof.roofline_util", op="analytics.quantile").set(0.42)
+    obs.gauge("weird-name.metric", path='a"b\\c\nd').set(-1.5e-3)
+    obs.histogram("serve.analytics.quantile.latency_s").observe(0.01)
+    snap = obs.REGISTRY.snapshot()
+    text = obs.prometheus_text(snap)
+    line_re = re.compile(_PROM_LINE)
+    lines = [ln for ln in text.splitlines() if ln]
+    assert lines, "prometheus_text produced no samples"
+    for ln in lines:
+        assert line_re.match(ln), f"invalid exposition line: {ln!r}"
+        float(ln.rsplit(" ", 1)[1])        # sample value parses
+    # dots in names become underscores, label values keep their content
+    assert any(ln.startswith("kernels_trace_total{") for ln in lines)
+    assert any("prof_roofline_util" in ln and "0.42" in ln for ln in lines)
+    assert any(r'path="a\"b\\c\nd"' in ln for ln in lines)
+    # histograms expand to _count/_sum + quantile samples
+    assert any("serve_analytics_quantile_latency_s_count" in ln
+               for ln in lines)
