@@ -39,6 +39,52 @@ def _median_restore_s(directory, iters: int = 3, **kwargs) -> float:
     return ts[len(ts) // 2]
 
 
+def _bench_ingest(rows: list, toks: np.ndarray, vocab: int, n: int) -> None:
+    """Crash-safe ingest: commit throughput, journal replay cost vs
+    journal length, and the epoch-fence hot-swap pause."""
+    from repro.ingest import GenerationServer, analytics_ingester
+
+    sw = obs.Stopwatch()
+    for shard_bits, tag in ((14, "short"), (11, "long")):
+        scratch = Path(tempfile.mkdtemp(prefix=f"bench_ingest_{tag}_"))
+        try:
+            ing = analytics_ingester(scratch, vocab, shard_bits=shard_bits,
+                                     fsync=False)
+            ing.recover()
+            sw.lap()
+            ing.append_tokens(toks)
+            ing.flush()
+            t_ingest = sw.lap()
+            shards = len(ing.serve_entries())
+            record(rows, f"ingest_commit_{tag}_journal_n{n}", t_ingest,
+                   shards=shards, journal_records=2 * shards,
+                   shards_per_s=round(shards / max(t_ingest, 1e-9), 1),
+                   tokens_per_s=round(n / max(t_ingest, 1e-9), 1))
+
+            # replay cost grows with journal length, not corpus size
+            t_recover = time_fn(
+                lambda: analytics_ingester(
+                    scratch, vocab, shard_bits=shard_bits).recover(),
+                iters=3)
+            record(rows, f"ingest_recover_{tag}_journal_n{n}", t_recover,
+                   journal_records=2 * shards,
+                   records_per_s=round(2 * shards / max(t_recover, 1e-9), 1))
+
+            if tag == "short":
+                # hot-swap pause: fenced swap with no reader in flight is
+                # the protocol floor (lock + gauge + drain check)
+                srv = GenerationServer(ing.engine())
+                pauses = []
+                for _ in range(5):
+                    sw.lap()
+                    srv.swap_generation(srv.engine, wait_drain=True)
+                    pauses.append(sw.lap())
+                record(rows, f"ingest_hot_swap_pause_n{n}",
+                       sorted(pauses)[len(pauses) // 2], swaps=len(pauses))
+        finally:
+            shutil.rmtree(scratch, ignore_errors=True)
+
+
 def run(n: int = 1 << 18, out: list | None = None) -> list:
     rows = out if out is not None else []
     vocab = 4096
@@ -110,6 +156,9 @@ def run(n: int = 1 << 18, out: list | None = None) -> list:
     t_b = time_fn(bounds, deg, lo, hi)
     record(rows, f"count_bounds_degraded_b{B}_n{n}", t_b,
            queries_per_s=round(B / t_b, 1))
+
+    # --- crash-safe streaming ingest ---------------------------------------
+    _bench_ingest(rows, toks, vocab, n)
 
     if out is None:
         save(rows, "robust.json")

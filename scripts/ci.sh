@@ -67,7 +67,11 @@ echo "SLO gate pass/fail exit codes ✓"
 # leaf corruption (detected by checksums, repaired bit-identically),
 # primary-bitmap corruption (detected, rebuild signalled), torn/partial
 # writes (skipped by step discovery), in-memory corruption (structural
-# verify + repair), shard loss (degraded serving with coverage bounds)
+# verify + repair), shard loss (degraded serving with coverage bounds),
+# and the streaming-ingest crash sweep: the ingester is killed after
+# every step of the two-phase shard commit protocol and must recover by
+# journal replay to a serving state bit-identical to a clean build
+# (plus torn-manifest, quarantine-coverage and hot-swap fencing checks)
 echo "== fault-injection smoke (chaos) =="
 python -m repro.launch.chaos --smoke
 

@@ -361,6 +361,52 @@ class ShardedAnalytics:
         return cls(shards=corpus.shards, n=corpus.n, sigma=corpus.sigma,
                    shard_bits=corpus.shard_bits)
 
+    # ---- incremental ingest / hot swap ---------------------------------
+    def add_shards(self, new_shards: WaveletMatrix, added_tokens: int,
+                   new_available=None) -> "ShardedAnalytics":
+        """Next-generation engine with ``new_shards`` appended.
+
+        ``new_shards`` is a stacked ``(K,)``-leaf pytree with this
+        engine's static geometry (same shard size, levels, sample rate);
+        ``added_tokens`` is the true token count the new shards carry
+        (``(K-1)·shard_size < added_tokens ≤ K·shard_size`` — only the
+        final shard may be partial). ``new_available`` masks freshly
+        quarantined shards (honest partial coverage during ingest); the
+        combined mask collapses back to ``None`` when everything is
+        available. The result is a *new value* — publish it through
+        ``ingest.serving.GenerationServer.swap_generation`` so in-flight
+        query batches finish against the old generation. ``n`` is a
+        static field, so each generation compiles its query kernels once.
+        """
+        if self.n != self.num_shards << self.shard_bits:
+            raise ValueError(
+                f"cannot append to a corpus with a partial tail shard "
+                f"(n={self.n}, {self.num_shards} shards of "
+                f"{self.shard_size})")
+        K = jax.tree.leaves(new_shards)[0].shape[0]
+        added_tokens = int(added_tokens)
+        if not ((K - 1) << self.shard_bits) < added_tokens \
+                <= (K << self.shard_bits):
+            raise ValueError(
+                f"added_tokens={added_tokens} does not fill {K} shard(s) "
+                f"of {self.shard_size}")
+        merged = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              self.shards, new_shards)
+        if self.available is None and new_available is None:
+            mask = None
+        else:
+            old = (jnp.ones((self.num_shards,), bool)
+                   if self.available is None else self.available)
+            new = (jnp.ones((K,), bool) if new_available is None
+                   else jnp.asarray(new_available, bool).reshape((K,)))
+            mask = jnp.concatenate([old, new])
+            if bool(jnp.all(mask)):
+                mask = None
+        obs.counter("ingest.shard_swap", layer="analytics").inc()
+        return dataclasses.replace(self, shards=merged,
+                                   n=self.n + added_tokens,
+                                   available=mask)
+
     # ---- batched queries (each one jittable, vmapped internally) -------
     def range_quantile(self, lo, hi, k, use_kernel: bool = False
                        ) -> jax.Array:

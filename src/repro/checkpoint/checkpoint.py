@@ -93,19 +93,26 @@ def step_dir_valid(d: Path, deep: bool = True) -> bool:
 
     Missing ``arrays.npz``/``meta.json``, unparseable meta, or a
     truncated/corrupt npz (broken zip central directory) all disqualify
-    it. ``deep=False`` skips opening the npz (listing-only callers).
+    it. A meta.json that *parses* but whose ``leaf_crc32`` map lacks keys
+    the npz actually holds also disqualifies: ``restore_checkpoint``
+    could not verify those leaves, so the step is not a safe restore
+    target (a half-rewritten meta is as dead as a torn npz).
+    ``deep=False`` skips opening the npz (listing-only callers).
     """
     if not (d / "meta.json").exists() or not (d / "arrays.npz").exists():
         return False
     try:
-        json.loads((d / "meta.json").read_text())
+        meta = json.loads((d / "meta.json").read_text())
     except (OSError, json.JSONDecodeError):
         return False
     if deep:
         try:
             with np.load(d / "arrays.npz") as z:
-                z.files
+                files = set(z.files)
         except Exception:
+            return False
+        crcs = meta.get("leaf_crc32")
+        if isinstance(crcs, dict) and not files <= set(crcs):
             return False
     return True
 

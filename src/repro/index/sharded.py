@@ -106,6 +106,57 @@ class ShardedTextIndex:
     def shard(self, s: jax.Array) -> FMIndex:
         return jax.tree.map(lambda l: l[s], self.shards)
 
+    # ---- incremental ingest / hot swap -------------------------------
+    def add_shards(self, new_shards: FMIndex, new_seams: jax.Array,
+                   added_tokens: int, new_available=None
+                   ) -> "ShardedTextIndex":
+        """Next-generation index with ``new_shards`` appended.
+
+        ``new_shards``: stacked ``(K,)``-leaf FM-index pytree with this
+        index's static geometry. ``new_seams``: the ``(K, 2·seam_overlap)``
+        boundary windows *preceding* each new shard (the seam between the
+        old tail and the first new shard, then between consecutive new
+        shards — ``ingest.ShardIngester.seam_windows`` derives them from
+        the journaled head/tail sidecars). ``added_tokens`` is the true
+        token count added (only the final shard may be partial — the old
+        corpus must end on a shard boundary). ``new_available`` masks
+        quarantined shards. The result is a new value; publish it through
+        ``GenerationServer.swap_generation`` for epoch-fenced hot swap.
+        """
+        if self.n != self.num_shards << self.shard_bits:
+            raise ValueError(
+                f"cannot append to an index with a partial tail shard "
+                f"(n={self.n}, {self.num_shards} shards of "
+                f"{self.shard_size})")
+        K = jax.tree.leaves(new_shards)[0].shape[0]
+        added_tokens = int(added_tokens)
+        if not ((K - 1) << self.shard_bits) < added_tokens \
+                <= (K << self.shard_bits):
+            raise ValueError(
+                f"added_tokens={added_tokens} does not fill {K} shard(s) "
+                f"of {self.shard_size}")
+        new_seams = jnp.asarray(new_seams, _I32)
+        if new_seams.shape != (K, 2 * self.seam_overlap):
+            raise ValueError(
+                f"new_seams shape {new_seams.shape} != "
+                f"({K}, {2 * self.seam_overlap})")
+        merged = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                              self.shards, new_shards)
+        seams = jnp.concatenate([self.seam_windows, new_seams], axis=0)
+        if self.available is None and new_available is None:
+            mask = None
+        else:
+            old = (jnp.ones((self.num_shards,), bool)
+                   if self.available is None else self.available)
+            new = (jnp.ones((K,), bool) if new_available is None
+                   else jnp.asarray(new_available, bool).reshape((K,)))
+            mask = jnp.concatenate([old, new])
+            if bool(jnp.all(mask)):
+                mask = None
+        obs.counter("ingest.shard_swap", layer="index").inc()
+        return dataclasses.replace(self, shards=merged, seam_windows=seams,
+                                   n=self.n + added_tokens, available=mask)
+
     def bits_per_token(self) -> float:
         total = sum(l.size * l.dtype.itemsize * 8
                     for l in jax.tree.leaves(self.shards))

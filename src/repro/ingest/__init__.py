@@ -1,0 +1,30 @@
+"""Crash-safe streaming ingest: journaled shard manifests, a two-phase
+shard commit protocol, and epoch-fenced hot-swap serving.
+
+The write-path counterpart of ``repro.robust``: PR 6 made *reading*
+corrupted state safe (checksums, structural verify, repair, degraded
+serving); this subsystem makes *creating* state safe. Shards reach the
+serving set only through the journaled commit protocol in
+:mod:`.ingester`, every durable fact lives in the append-only
+checksummed ``manifest.jsonl`` of :mod:`.journal`, and serving swaps
+between corpus generations through the epoch fencing of :mod:`.serving`
+— a process dying at ANY protocol step recovers by journal replay to a
+state bit-identical to a clean rebuild (the chaos sweep in
+``launch.chaos`` proves it step by step).
+"""
+from .ingester import (COMMIT_STEPS, QUARANTINE_STEP, IngestError,
+                       RecoveryReport, ShardIngester, analytics_ingester,
+                       index_ingester)
+from .journal import (MANIFEST_NAME, RECORD_TYPES, JournalCorrupt,
+                      ManifestState, ShardEntry, append_record,
+                      load_manifest, read_journal, record_crc, replay)
+from .serving import GenerationServer
+
+__all__ = [
+    "COMMIT_STEPS", "QUARANTINE_STEP", "IngestError", "RecoveryReport",
+    "ShardIngester", "analytics_ingester", "index_ingester",
+    "MANIFEST_NAME", "RECORD_TYPES", "JournalCorrupt", "ManifestState",
+    "ShardEntry", "append_record", "load_manifest", "read_journal",
+    "record_crc", "replay",
+    "GenerationServer",
+]

@@ -23,6 +23,14 @@ on any failure):
   from the BWT bitmaps (O(m) LF-walk SA reconstruction)
 * shard loss                      — degraded serving with exact coverage
   fraction and count bounds that bracket the full-corpus truth
+* ingest crash points             — the ingester is killed after every
+  step of the two-phase shard commit protocol; journal replay + re-feed
+  must reconverge to a serving state bit-identical to a clean build
+* torn journal tail               — a crashed manifest append is dropped,
+  the stream resumes from the last durable offset
+* ingest quarantine / hot swap    — permanently failing shard builds are
+  quarantined (honest coverage bounds), and epoch-fenced generation
+  swaps never show a query batch a mixed corpus
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import tempfile
 from pathlib import Path
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro import obs
@@ -214,6 +223,130 @@ def run_index_scenarios(seed: int, check: Check):
                  f"count ∈ [{int(lower[0])}, {int(upper[0])}], true {full}")
 
 
+def run_ingest_scenarios(seed: int, scratch: Path, check: Check):
+    """Crash-point sweep over the two-phase shard commit protocol.
+
+    For every protocol step: arm ``crash_after(step)``, feed the stream,
+    die, then recover in a "new process" (fresh ingester, journal
+    replay), re-feed from ``resume_offset``, and demand the served engine
+    is *bit-identical* to a clean from-scratch build — plus torn-journal,
+    quarantine-coverage and hot-swap generation checks.
+    """
+    from repro.analytics.engine import ShardedAnalytics
+    from repro.data.compressed_store import build_compressed_corpus
+    from repro.ingest import (COMMIT_STEPS, GenerationServer, ShardIngester,
+                              analytics_ingester, read_journal)
+    from repro.robust import CrashInjected, crash_after, verify_manifest
+
+    rng = np.random.default_rng(seed)
+    n, vocab, shard_bits = 1 << 11, 64, 8
+    toks = rng.integers(0, vocab, n).astype(np.int64)
+    ref = ShardedAnalytics.from_corpus(
+        build_compressed_corpus(toks, vocab, shard_bits=shard_bits,
+                                parallel=False))
+
+    def fresh(d):
+        return analytics_ingester(d, vocab, shard_bits=shard_bits,
+                                  backoff_s=0.0)
+
+    # -- crash after every protocol step → recover → bit-identical --------
+    for step in COMMIT_STEPS:
+        with obs.span("chaos.scenario", scenario="ingest_crash", step=step):
+            d = scratch / f"ingest_{step}"
+            ing = fresh(d)
+            ing.recover()
+            died = False
+            try:
+                with crash_after(step):
+                    ing.append_tokens(toks)
+                    ing.flush()
+            except CrashInjected:
+                died = True
+            ing2 = fresh(d)
+            rep = ing2.recover()
+            ing2.append_tokens(toks[rep.resume_offset:])
+            ing2.flush()
+            eng = ing2.engine()
+            ok = (died and eng.available is None
+                  and trees_identical(eng.shards, ref.shards)
+                  and verify_manifest(d).ok)
+            check.record(f"ingest crash@{step} recovers bit-identical", ok,
+                         rep.summary())
+
+    # -- torn journal tail: dropped, stream resumes -----------------------
+    with obs.span("chaos.scenario", scenario="ingest_torn_tail"):
+        d = scratch / "ingest_torn"
+        ing = fresh(d)
+        ing.recover()
+        ing.append_tokens(toks)
+        ing.flush()
+        j = d / "manifest.jsonl"
+        j.write_bytes(j.read_bytes()[:-7])          # crash mid-append
+        _, torn = read_journal(j, strict=False)
+        ing2 = fresh(d)
+        rep = ing2.recover()
+        ing2.append_tokens(toks[rep.resume_offset:])
+        ing2.flush()
+        eng = ing2.engine()
+        check.record("ingest torn journal tail dropped + resumed",
+                     torn and trees_identical(eng.shards, ref.shards),
+                     rep.summary())
+
+    # -- permanent build failure: quarantined, served with bounds ---------
+    with obs.span("chaos.scenario", scenario="ingest_quarantine"):
+        d = scratch / "ingest_quarantine"
+        calls = {"n": 0}
+
+        def build(s):
+            calls["n"] += 1
+            if calls["n"] == 2:
+                raise RuntimeError("poisoned batch")
+            from repro.core.wavelet_matrix import build_wavelet_matrix
+            return build_wavelet_matrix(s, vocab, sample_rate=512)
+
+        ing = ShardIngester(d, build, shard_bits, sigma=vocab,
+                            kind="analytics", token_dtype=np.uint32,
+                            retries=0, backoff_s=0.0)
+        ing.recover()
+        ing.append_tokens(toks)
+        ing.flush()
+        eng = ing.engine()
+        lower, upper, cov = eng.range_count_bounds(0, n, 0, vocab // 2)
+        truth = int(ref.range_count(0, n, 0, vocab // 2))
+        ok = (eng.degraded
+              and int(lower) <= truth <= int(upper)
+              and 0.0 < float(cov) < 1.0
+              and verify_manifest(d).ok)
+        check.record("ingest quarantine serves honest bounds", ok,
+                     f"coverage {float(cov):.2f}, "
+                     f"count ∈ [{int(lower)}, {int(upper)}], true {truth}")
+
+    # -- hot swap: fenced generation bump, no mixed-corpus answer ---------
+    with obs.span("chaos.scenario", scenario="ingest_hot_swap"):
+        d = scratch / "ingest_swap"
+        ing = fresh(d)
+        ing.recover()
+        cut = (n >> shard_bits >> 1) << shard_bits
+        ing.append_tokens(toks[:cut])
+        srv = GenerationServer(ing.engine())
+        with srv.session() as (gen0, eng0):
+            ing.append_tokens(toks[cut:])
+            ing.flush()
+            new = ing.serve_entries()[cut >> shard_bits:]
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[ing.shard_tree(e) for e in new])
+            eng1 = eng0.add_shards(stacked, n - cut)
+            srv.swap_generation(eng1, wait_drain=False)
+            # the pinned session still sees the old corpus…
+            old_n = int(eng0.range_count(0, eng0.n, 0, vocab))
+        gen1, eng_now = srv.pin()
+        ok = (old_n == cut and gen1 == gen0 + 1
+              and eng_now.n == n
+              and trees_identical(eng_now.shards, ref.shards))
+        check.record("ingest hot swap fences generations", ok,
+                     f"gen {gen0}→{gen1}, n {cut}→{eng_now.n}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -260,6 +393,9 @@ def main():
         print("text-index fault injection:")
         with obs.span("chaos.index"):
             run_index_scenarios(args.seed, check)
+        print("streaming-ingest crash injection:")
+        with obs.span("chaos.ingest"):
+            run_ingest_scenarios(args.seed, scratch / "ingest", check)
     finally:
         if not args.dir:
             shutil.rmtree(scratch, ignore_errors=True)

@@ -20,7 +20,8 @@ Degraded-mode serving (per-shard availability masks, coverage-reported
 answers) lives on the engines themselves — ``analytics.engine`` and
 ``index.sharded``.
 """
-from .faults import (corrupt_snapshot_leaf, delete_file, delete_step,
+from .faults import (CrashInjected, corrupt_snapshot_leaf, crash_after,
+                     check_crash_point, delete_file, delete_step,
                      flip_leaf_bit, inject_partial_tmp, truncate_file,
                      with_retry)
 from .integrity import (IntegrityError, checksum_array, checksum_flat,
@@ -30,7 +31,7 @@ from .repair import (classify_bad_keys, is_primary_key, repair_analytics,
                      repair_wavelet_matrix, repair_wavelet_tree)
 from .verify import (VerifyReport, Violation, verify_analytics,
                      verify_binary_rank, verify_binary_select,
-                     verify_bitvector, verify_fm_index,
+                     verify_bitvector, verify_fm_index, verify_manifest,
                      verify_sharded_index, verify_wavelet_matrix,
                      verify_wavelet_tree)
 
@@ -39,10 +40,12 @@ __all__ = [
     "trees_identical", "verify_flat",
     "VerifyReport", "Violation", "verify_analytics", "verify_binary_rank",
     "verify_binary_select", "verify_bitvector", "verify_fm_index",
-    "verify_sharded_index", "verify_wavelet_matrix", "verify_wavelet_tree",
+    "verify_manifest", "verify_sharded_index", "verify_wavelet_matrix",
+    "verify_wavelet_tree",
     "classify_bad_keys", "is_primary_key", "repair_analytics",
     "repair_fm_index", "repair_sharded_index", "repair_wavelet_matrix",
     "repair_wavelet_tree",
-    "corrupt_snapshot_leaf", "delete_file", "delete_step", "flip_leaf_bit",
+    "CrashInjected", "corrupt_snapshot_leaf", "crash_after",
+    "check_crash_point", "delete_file", "delete_step", "flip_leaf_bit",
     "inject_partial_tmp", "truncate_file", "with_retry",
 ]

@@ -11,14 +11,23 @@ Two fault surfaces, matching how corruption reaches a serving engine:
   stale ``.tmp`` partial writes (``truncate_file`` / ``delete_file`` /
   ``inject_partial_tmp``), the crash-mid-write failure modes
   ``checkpoint.latest_step`` must skip over.
+* **Crash points** — ``crash_after(step)`` arms a named protocol step;
+  instrumented write paths (the ingest commit protocol) call
+  ``check_crash_point(step)`` after each step and the armed one raises
+  :class:`CrashInjected` — a ``BaseException`` so no ``except Exception``
+  handler on the way out can "handle" a simulated process death. The
+  chaos sweep kills the ingester after *every* step this way and asserts
+  recovery converges to the clean-rebuild state.
 
 Everything takes an explicit seed; tests and the ``launch.chaos`` CLI
 replay identical fault sequences. ``with_retry`` is the bounded
 retry/backoff wrapper the restore → rebuild escalation uses around shard
-builds.
+builds — full-jitter exponential backoff under an optional wall-clock
+``deadline_s``.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import shutil
 import time
@@ -181,30 +190,105 @@ def inject_partial_tmp(ckpt_dir: str | Path, step: int = 99) -> Path:
 
 
 # --------------------------------------------------------------------------
+# crash-point injection (simulated process death mid-protocol)
+# --------------------------------------------------------------------------
+
+class CrashInjected(BaseException):
+    """A ``crash_after``-armed step was reached — the simulated SIGKILL.
+
+    Deliberately a ``BaseException``: a real crash is not handled by
+    ``except Exception`` cleanup/retry paths, and neither is this one, so
+    the injected death exits the protocol exactly where the armed step
+    ends — whatever is on disk at that instant is what recovery sees.
+    """
+
+    def __init__(self, step: str):
+        self.step = step
+        super().__init__(f"injected crash after step {step!r}")
+
+
+_armed_crash_step: Optional[str] = None
+
+
+@contextlib.contextmanager
+def crash_after(step: Optional[str]):
+    """Arm one named protocol step for the scope of the ``with`` block.
+
+    The first ``check_crash_point(step)`` call for the armed step raises
+    :class:`CrashInjected` (and disarms, so recovery code running in the
+    same process is not re-killed). ``None`` arms nothing.
+    """
+    global _armed_crash_step
+    prev = _armed_crash_step
+    _armed_crash_step = step
+    try:
+        yield
+    finally:
+        _armed_crash_step = prev
+
+
+def check_crash_point(step: str) -> None:
+    """Instrumented protocol steps call this after completing ``step``."""
+    global _armed_crash_step
+    if _armed_crash_step is not None and _armed_crash_step == step:
+        _armed_crash_step = None
+        obs.counter("robust.fault", kind="crash_point").inc()
+        obs.event("fault.crash_point", kind="fault", step=step)
+        raise CrashInjected(step)
+
+
+# --------------------------------------------------------------------------
 # bounded retry / backoff
 # --------------------------------------------------------------------------
 
 def with_retry(fn: Callable, *, retries: int = 2, backoff_s: float = 0.05,
                exceptions: Sequence[type] = (Exception,),
                on_retry: Optional[Callable[[int, BaseException], None]]
-               = None):
-    """Call ``fn()`` with up to ``retries`` re-attempts and exponential
-    backoff (backoff_s · 2^attempt between tries). Re-raises the last
-    exception once the budget is spent. ``on_retry(attempt, exc)`` is
-    invoked before each sleep — callers log through it.
+               = None,
+               jitter: bool = True,
+               deadline_s: Optional[float] = None,
+               rng: Optional[np.random.Generator] = None,
+               sleep: Callable[[float], None] = time.sleep):
+    """Call ``fn()`` with up to ``retries`` re-attempts, full-jitter
+    exponential backoff, and an optional wall-clock deadline.
+
+    Backoff before attempt ``a+1`` is drawn uniformly from
+    ``[0, backoff_s · 2^a]`` (AWS-style *full jitter* — a fleet of
+    retriers decorrelates instead of thundering in lockstep;
+    ``jitter=False`` restores the deterministic cap). ``deadline_s``
+    bounds the *total* time spent inside this call: once the elapsed time
+    reaches it the last exception is re-raised even if the retry budget
+    remains, and every sleep is clipped so the deadline is never
+    overshot by a backoff. Re-raises the last exception once either
+    budget is spent. ``on_retry(attempt, exc)`` is invoked before each
+    sleep — callers log through it. ``rng``/``sleep`` are injectable for
+    deterministic tests.
     """
+    rng = rng if rng is not None else np.random.default_rng()
+    start = time.monotonic()
     last: BaseException | None = None
     for attempt in range(retries + 1):
         try:
             return fn()
         except tuple(exceptions) as e:          # noqa: PERF203
             last = e
-            if attempt == retries:
+            elapsed = time.monotonic() - start
+            out_of_time = (deadline_s is not None
+                           and elapsed >= deadline_s)
+            if attempt == retries or out_of_time:
                 obs.counter("robust.retry_exhausted").inc()
+                obs.event("retry_exhausted", attempt=attempt,
+                          error=type(e).__name__,
+                          deadline_hit=bool(out_of_time))
                 raise
             obs.counter("robust.retry").inc()
             obs.event("retry", attempt=attempt, error=type(e).__name__)
             if on_retry is not None:
                 on_retry(attempt, e)
-            time.sleep(backoff_s * (2 ** attempt))
+            delay = backoff_s * (2 ** attempt)
+            if jitter:
+                delay = float(rng.uniform(0.0, delay))
+            if deadline_s is not None:
+                delay = min(delay, max(0.0, deadline_s - elapsed))
+            sleep(delay)
     raise last  # unreachable; keeps type checkers honest

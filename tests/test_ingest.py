@@ -1,0 +1,469 @@
+"""Crash-safe streaming ingest suite.
+
+The contract under test: a process dying after ANY step of the two-phase
+shard commit protocol — or any journal append — recovers by replay to a
+serving state *bit-identical* to a clean from-scratch build over the same
+stream; hot swaps between corpus generations never tear a query batch;
+quarantined generations degrade coverage honestly instead of crashing.
+"""
+import json
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analytics.engine import ShardedAnalytics
+from repro.data.compressed_store import build_compressed_corpus
+from repro.index.sharded import build_sharded_index
+from repro.ingest import (COMMIT_STEPS, QUARANTINE_STEP, GenerationServer,
+                          IngestError, JournalCorrupt, ShardIngester,
+                          analytics_ingester, append_record, index_ingester,
+                          load_manifest, read_journal, record_crc)
+from repro.robust import (CrashInjected, crash_after, trees_identical,
+                          verify_manifest)
+
+SIGMA = 8
+SHARD_BITS = 8                                 # 256-token shards: fast
+N = 1500                                       # 5 full shards + tail
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    rng = np.random.default_rng(7)
+    return rng.integers(0, SIGMA, N).astype(np.int64)
+
+
+@pytest.fixture(scope="module")
+def ref_analytics(tokens):
+    corpus = build_compressed_corpus(tokens, SIGMA, shard_bits=SHARD_BITS,
+                                     parallel=False)
+    return ShardedAnalytics.from_corpus(corpus)
+
+
+@pytest.fixture(scope="module")
+def ref_index(tokens):
+    return build_sharded_index(tokens, SIGMA, shard_bits=SHARD_BITS,
+                               sample_rate=16, seam_overlap=7,
+                               parallel=False)
+
+
+def _analytics(d, **kw):
+    return analytics_ingester(d, SIGMA, shard_bits=SHARD_BITS,
+                              backoff_s=0.0, **kw)
+
+
+def _index(d, **kw):
+    return index_ingester(d, SIGMA, shard_bits=SHARD_BITS, sample_rate=16,
+                          seam_overlap=7, backoff_s=0.0, **kw)
+
+
+def _feed(ing, toks):
+    ing.recover()
+    ing.append_tokens(toks)
+    ing.flush()
+    return ing
+
+
+def _index_identical(eng, ref):
+    return (eng.n == ref.n
+            and trees_identical(eng.shards, ref.shards)
+            and np.array_equal(np.asarray(eng.seam_windows),
+                               np.asarray(ref.seam_windows)))
+
+
+# ---------------------------------------------------------------------------
+# journal: append-only, checksummed, torn-tail tolerant
+# ---------------------------------------------------------------------------
+
+def test_journal_roundtrip_and_crc(tmp_path):
+    j = tmp_path / "manifest.jsonl"
+    recs = [{"type": "INTENT", "gen": 0, "file": "shard_00000000.npz",
+             "n_tokens": 10, "leaf_crc32": {"a": 1}},
+            {"type": "COMMIT", "gen": 0}]
+    for r in recs:
+        append_record(j, r)
+    back, torn = read_journal(j)
+    assert not torn and len(back) == 2
+    assert back[0]["file"] == "shard_00000000.npz"
+    # every stored line carries a crc over its canonical JSON
+    for line in j.read_text().splitlines():
+        rec = json.loads(line)
+        assert rec.pop("crc32") == record_crc(rec)
+
+
+def test_journal_rejects_bad_record_type(tmp_path):
+    with pytest.raises(ValueError):
+        append_record(tmp_path / "m.jsonl", {"type": "PUBLISH", "gen": 0})
+
+
+def test_torn_tail_is_dropped_not_fatal(tmp_path):
+    j = tmp_path / "manifest.jsonl"
+    append_record(j, {"type": "INTENT", "gen": 0, "file": "f.npz",
+                      "n_tokens": 4})
+    append_record(j, {"type": "COMMIT", "gen": 0})
+    whole = j.read_bytes()
+    j.write_bytes(whole[:-9])                  # crash mid-append
+    back, torn = read_journal(j)
+    assert torn and len(back) == 1 and back[0]["type"] == "INTENT"
+    st = load_manifest(tmp_path)
+    assert st.torn_tail and [e.gen for e in st.pending] == [0]
+
+
+def test_mid_journal_corruption_is_fatal(tmp_path):
+    j = tmp_path / "manifest.jsonl"
+    for g in range(3):
+        append_record(j, {"type": "INTENT", "gen": g, "file": f"{g}.npz",
+                          "n_tokens": 1})
+    lines = j.read_text().splitlines()
+    lines[1] = lines[1][:-5] + "x}"            # bit-rot before the tail
+    j.write_text("\n".join(lines) + "\n")
+    with pytest.raises(JournalCorrupt):
+        read_journal(j, strict=True)
+    back, torn = read_journal(j, strict=False)
+    assert torn and len(back) == 1             # scan stops at the bad line
+
+
+# ---------------------------------------------------------------------------
+# clean ingest ≡ from-scratch build (both engine kinds)
+# ---------------------------------------------------------------------------
+
+def test_analytics_ingest_bit_identical(tokens, ref_analytics, tmp_path):
+    ing = _feed(_analytics(tmp_path), tokens)
+    eng = ing.engine()
+    assert eng.n == ref_analytics.n and eng.available is None
+    assert trees_identical(eng.shards, ref_analytics.shards)
+    # and the answers match a numpy oracle
+    lo, hi, s0, s1 = 100, 1400, 2, 6
+    truth = int(np.sum((tokens[lo:hi] >= s0) & (tokens[lo:hi] < s1)))
+    assert int(eng.range_count(lo, hi, s0, s1)) == truth
+
+
+def test_index_ingest_bit_identical(tokens, ref_index, tmp_path):
+    ing = _feed(_index(tmp_path), tokens)
+    eng = ing.engine()
+    assert _index_identical(eng, ref_index)
+    pat = np.asarray(tokens[40:43])[None, :].astype(np.int32)
+    ln = np.asarray([3], np.int32)
+    assert int(eng.count(pat, ln)[0]) == int(ref_index.count(pat, ln)[0])
+
+
+def test_append_validates_token_range(tmp_path):
+    ing = _analytics(tmp_path)
+    ing.recover()
+    with pytest.raises(ValueError):
+        ing.append_tokens(np.asarray([0, SIGMA]))
+    with pytest.raises(ValueError):
+        ing.append_tokens(np.asarray([-1, 0]))  # must not wrap via uint cast
+    ing.flush()
+    with pytest.raises(IngestError):
+        ing.append_tokens(np.asarray([1]))      # finalized
+
+
+# ---------------------------------------------------------------------------
+# the crash-point matrix: kill after every protocol step, recover, re-feed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("step", COMMIT_STEPS)
+def test_crash_matrix_analytics(step, tokens, ref_analytics, tmp_path):
+    ing = _analytics(tmp_path)
+    ing.recover()
+    with pytest.raises(CrashInjected):
+        with crash_after(step):
+            ing.append_tokens(tokens)
+            ing.flush()
+    # "new process": fresh ingester, journal replay, resume the stream
+    ing2 = _analytics(tmp_path)
+    rep = ing2.recover()
+    assert rep.resume_offset <= N
+    ing2.append_tokens(tokens[rep.resume_offset:])
+    ing2.flush()
+    eng = ing2.engine()
+    assert eng.available is None               # nothing quarantined
+    assert trees_identical(eng.shards, ref_analytics.shards)
+    assert verify_manifest(tmp_path).ok
+
+
+@pytest.mark.parametrize("step", COMMIT_STEPS)
+def test_crash_matrix_index(step, tokens, ref_index, tmp_path):
+    ing = _index(tmp_path)
+    ing.recover()
+    with pytest.raises(CrashInjected):
+        with crash_after(step):
+            ing.append_tokens(tokens)
+            ing.flush()
+    ing2 = _index(tmp_path)
+    rep = ing2.recover()
+    ing2.append_tokens(tokens[rep.resume_offset:])
+    ing2.flush()
+    assert _index_identical(ing2.engine(), ref_index)
+    assert verify_manifest(tmp_path).ok
+
+
+def test_crash_during_quarantine_append(tokens, ref_analytics, tmp_path):
+    """Crash right after the QUARANTINE record lands: the record is
+    durable, so replay resumes past the poisoned shard, and a later
+    healthy re-feed of the same data serves under a fresh generation."""
+    boom = {"on": True}
+
+    def build(s):
+        if boom["on"]:
+            raise RuntimeError("poisoned batch")
+        from repro.core.wavelet_matrix import build_wavelet_matrix
+        return build_wavelet_matrix(s, SIGMA, sample_rate=512)
+
+    ing = ShardIngester(tmp_path, build, SHARD_BITS, sigma=SIGMA,
+                        kind="analytics", token_dtype=np.uint32,
+                        retries=0, backoff_s=0.0, jit_build=True)
+    ing.recover()
+    with pytest.raises(CrashInjected):
+        with crash_after(QUARANTINE_STEP):
+            ing.append_tokens(tokens)
+    boom["on"] = False
+    ing2 = _analytics(tmp_path)
+    rep = ing2.recover()
+    assert rep.quarantined == [0]
+    assert rep.resume_offset == 1 << SHARD_BITS   # gen 0 consumed its data
+    # upstream replays the lost tokens (at-least-once) → full corpus, but
+    # the quarantined slot stays masked until operators drop it
+    ing2.append_tokens(tokens)                    # full replay from 0
+    ing2.flush()
+    eng = ing2.engine()
+    assert eng.available is not None and not bool(eng.available[0])
+    assert int(np.asarray(eng.available).sum()) == eng.num_shards - 1
+
+
+def test_recovery_is_idempotent(tokens, tmp_path):
+    ing = _analytics(tmp_path)
+    ing.recover()
+    with pytest.raises(CrashInjected):
+        with crash_after("intent"):
+            ing.append_tokens(tokens)
+    a = _analytics(tmp_path)
+    r1 = a.recover()
+    b = _analytics(tmp_path)
+    r2 = b.recover()
+    assert r1.resume_offset == r2.resume_offset
+    assert [e.gen for e in b.state.pending] == []
+    # a third replay appends no further ABORT records
+    n_lines = len((tmp_path / "manifest.jsonl").read_text().splitlines())
+    _analytics(tmp_path).recover()
+    assert len((tmp_path / "manifest.jsonl").read_text()
+               .splitlines()) == n_lines
+
+
+def test_corrupt_committed_shard_demoted_on_recovery(tokens, tmp_path):
+    ing = _feed(_analytics(tmp_path), tokens)
+    victim = ing.serve_entries()[1]
+    path = tmp_path / "shards" / victim.file
+    blob = bytearray(path.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    path.write_bytes(bytes(blob))
+    ing2 = _analytics(tmp_path)
+    rep = ing2.recover()
+    assert rep.quarantined == [victim.gen]
+    eng = ing2.engine()
+    assert eng.available is not None and not bool(eng.available[1])
+    # resume offset unchanged: the generation still owns its stream slot
+    assert rep.resume_offset == N
+
+
+# ---------------------------------------------------------------------------
+# quarantine → honest partial coverage
+# ---------------------------------------------------------------------------
+
+def test_quarantined_shard_coverage_bounds(tokens, ref_analytics, tmp_path):
+    calls = {"n": 0}
+
+    def build(s):
+        calls["n"] += 1
+        if calls["n"] == 3:                    # third shard always fails
+            raise RuntimeError("permanent")
+        from repro.core.wavelet_matrix import build_wavelet_matrix
+        return build_wavelet_matrix(s, SIGMA, sample_rate=512)
+
+    ing = ShardIngester(tmp_path, build, SHARD_BITS, sigma=SIGMA,
+                        kind="analytics", token_dtype=np.uint32,
+                        retries=0, backoff_s=0.0)
+    _feed(ing, tokens)
+    eng = ing.engine()
+    assert eng.degraded and eng.n == N
+    lo, hi, s0, s1 = 0, N, 2, 6
+    lower, upper, cov = eng.range_count_bounds(lo, hi, s0, s1)
+    truth = int(ref_analytics.range_count(lo, hi, s0, s1))
+    assert int(lower) <= truth <= int(upper)
+    assert 0.0 < float(cov) < 1.0
+    # verify_manifest flags nothing: a journaled quarantine is a valid
+    # (if degraded) state, not a protocol violation
+    assert verify_manifest(tmp_path).ok
+
+
+# ---------------------------------------------------------------------------
+# manifest self-checks (robust.verify.verify_manifest)
+# ---------------------------------------------------------------------------
+
+def test_verify_manifest_commit_without_file_is_fatal(tokens, tmp_path):
+    ing = _feed(_analytics(tmp_path), tokens)
+    victim = ing.serve_entries()[0]
+    (tmp_path / "shards" / victim.file).unlink()
+    rep = verify_manifest(tmp_path)
+    assert not rep.ok and not rep.repairable
+    assert any(v.kind == "commit_missing_shard" for v in rep.violations)
+
+
+def test_verify_manifest_checksum_mismatch_repairable(tokens, tmp_path):
+    ing = _feed(_analytics(tmp_path), tokens)
+    victim = ing.serve_entries()[0]
+    path = tmp_path / "shards" / victim.file
+    arrays = dict(np.load(path))
+    k = sorted(arrays)[0]
+    arrays[k] = arrays[k].copy()
+    arrays[k].flat[0] ^= 1
+    np.savez(path, **arrays)
+    rep = verify_manifest(tmp_path)
+    assert not rep.ok and rep.repairable
+    assert any(v.kind == "commit_checksum_mismatch" for v in rep.violations)
+
+
+def test_verify_manifest_dangling_intent_repairable(tokens, tmp_path):
+    ing = _analytics(tmp_path)
+    ing.recover()
+    with pytest.raises(CrashInjected):
+        with crash_after("rename"):
+            ing.append_tokens(tokens)
+    rep = verify_manifest(tmp_path)
+    assert not rep.ok and rep.repairable
+    assert any(v.kind == "dangling_intent" for v in rep.violations)
+
+
+def test_verify_manifest_nonmonotone_generation_fatal(tmp_path):
+    j = tmp_path / "manifest.jsonl"
+    append_record(j, {"type": "INTENT", "gen": 1, "file": "a.npz",
+                      "n_tokens": 1})
+    append_record(j, {"type": "INTENT", "gen": 0, "file": "b.npz",
+                      "n_tokens": 1})
+    rep = verify_manifest(tmp_path, deep=False)
+    assert any(v.kind == "generation_monotonicity" and not v.derived
+               for v in rep.violations)
+
+
+# ---------------------------------------------------------------------------
+# hot swap: add_shards + GenerationServer epoch fencing
+# ---------------------------------------------------------------------------
+
+def _stack_entries(ing, entries):
+    trees = [ing.shard_tree(e) for e in entries]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def test_add_shards_matches_full_rebuild(tokens, ref_analytics, tmp_path):
+    ing = _analytics(tmp_path)
+    ing.recover()
+    cut = 4 * (1 << SHARD_BITS)
+    ing.append_tokens(tokens[:cut])
+    eng0 = ing.engine()
+    ing.append_tokens(tokens[cut:])
+    ing.flush()
+    new = ing.serve_entries()[4:]
+    eng1 = eng0.add_shards(_stack_entries(ing, new),
+                           sum(e.n_tokens for e in new))
+    assert eng1.n == N and eng1.available is None
+    assert trees_identical(eng1.shards, ref_analytics.shards)
+
+
+def test_index_add_shards_matches_full_rebuild(tokens, ref_index, tmp_path):
+    ing = _index(tmp_path)
+    ing.recover()
+    cut = 4 * (1 << SHARD_BITS)
+    ing.append_tokens(tokens[:cut])
+    eng0 = ing.engine()
+    ing.append_tokens(tokens[cut:])
+    ing.flush()
+    entries = ing.serve_entries()
+    new = entries[4:]
+    seams = ing.seam_windows(entries)[3:]      # seam preceding each new shard
+    eng1 = eng0.add_shards(_stack_entries(ing, new), jnp.asarray(seams),
+                           sum(e.n_tokens for e in new))
+    assert _index_identical(eng1, ref_index)
+
+
+def test_add_shards_rejects_partial_tail_and_bad_counts(tokens, tmp_path):
+    ing = _feed(_analytics(tmp_path), tokens)          # partial tail shard
+    eng = ing.engine()
+    one = jax.tree.map(lambda x: x[:1], eng.shards)
+    with pytest.raises(ValueError):
+        eng.add_shards(one, 10)                        # n not shard-aligned
+    full = _feed(_analytics(tmp_path / "full"),
+                 tokens[:4 * (1 << SHARD_BITS)]).engine()
+    with pytest.raises(ValueError):
+        full.add_shards(one, 2 * (1 << SHARD_BITS))    # count ≠ K shards
+
+
+def test_hot_swap_under_concurrent_queries(tokens, tmp_path):
+    """No query batch ever observes a mixed-generation corpus: inside a
+    pinned session the engine's answer must equal that generation's
+    oracle, no matter how many swaps land meanwhile."""
+    ing = _analytics(tmp_path)
+    ing.recover()
+    shard = 1 << SHARD_BITS
+    ing.append_tokens(tokens[:2 * shard])
+    srv = GenerationServer(ing.engine())
+    expected = {0: 2 * shard}
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        while not stop.is_set():
+            with srv.session() as (gen, eng):
+                n = int(eng.range_count(0, eng.n, 0, SIGMA))
+                if n != expected[gen]:
+                    errors.append((gen, n, expected[gen]))
+
+    threads = [threading.Thread(target=reader) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for k in (3, 4, 5):                        # three live swaps
+        ing.append_tokens(tokens[(k - 1) * shard:k * shard])
+        new = ing.serve_entries()[k - 1:]
+        eng1 = srv.engine.add_shards(_stack_entries(ing, new), shard)
+        expected[srv.generation + 1] = k * shard
+        srv.swap_generation(eng1, wait_drain=True, timeout_s=30)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:3]
+    assert srv.generation == 3
+
+
+def test_swap_fence_waits_for_drain(tmp_path, tokens):
+    ing = _feed(_analytics(tmp_path), tokens)
+    srv = GenerationServer(ing.engine())
+    entered = threading.Event()
+    release = threading.Event()
+    order = []
+
+    def holder():
+        with srv.session():
+            entered.set()
+            release.wait(5)
+            order.append("session_exit")
+
+    t = threading.Thread(target=holder)
+    t.start()
+    entered.wait(5)
+    with pytest.raises(TimeoutError):
+        srv.swap_generation(ing.engine(), wait_drain=True, timeout_s=0.05)
+    # the swap itself landed despite the fence timing out
+    assert srv.generation == 1
+
+    def swapper():
+        srv.swap_generation(ing.engine(), wait_drain=True, timeout_s=10)
+        order.append("swap_done")
+
+    t2 = threading.Thread(target=swapper)
+    t2.start()
+    release.set()
+    t.join(5)
+    t2.join(5)
+    assert order == ["session_exit", "swap_done"]

@@ -389,3 +389,94 @@ def test_with_retry_only_catches_listed_exceptions():
     with pytest.raises(TypeError):
         with_retry(raises_type_error, retries=5, backoff_s=0.0,
                    exceptions=(OSError,))
+
+
+def test_with_retry_full_jitter_draws_within_envelope():
+    """Sleep before attempt a+1 is uniform on [0, backoff·2^a] (full
+    jitter) — deterministic under an injected rng, and reproducing the
+    same rng reproduces the exact draws."""
+    sleeps = []
+
+    def always_fails():
+        raise OSError("transient")
+
+    with pytest.raises(OSError):
+        with_retry(always_fails, retries=4, backoff_s=0.1,
+                   rng=np.random.default_rng(42), sleep=sleeps.append)
+    caps = [0.1 * (2 ** a) for a in range(4)]
+    assert len(sleeps) == 4
+    assert all(0.0 <= s <= c for s, c in zip(sleeps, caps))
+    # full jitter, not the deterministic cap
+    assert any(s < c for s, c in zip(sleeps, caps))
+    replay = []
+    with pytest.raises(OSError):
+        with_retry(always_fails, retries=4, backoff_s=0.1,
+                   rng=np.random.default_rng(42), sleep=replay.append)
+    assert replay == sleeps
+
+
+def test_with_retry_jitter_off_is_deterministic_cap():
+    sleeps = []
+
+    def always_fails():
+        raise OSError("transient")
+
+    with pytest.raises(OSError):
+        with_retry(always_fails, retries=3, backoff_s=0.05, jitter=False,
+                   sleep=sleeps.append)
+    assert sleeps == [0.05, 0.1, 0.2]
+
+
+def test_with_retry_deadline_cuts_retry_budget():
+    """deadline_s=0 expires at the first failure: the exception re-raises
+    immediately even though the retry budget would allow more attempts."""
+    calls = {"n": 0}
+
+    def always_fails():
+        calls["n"] += 1
+        raise OSError("transient")
+
+    with pytest.raises(OSError):
+        with_retry(always_fails, retries=10, backoff_s=0.0, deadline_s=0.0)
+    assert calls["n"] == 1
+
+
+def test_with_retry_deadline_clips_sleeps():
+    sleeps = []
+
+    def always_fails():
+        raise OSError("transient")
+
+    with pytest.raises(OSError):
+        with_retry(always_fails, retries=5, backoff_s=100.0, jitter=False,
+                   deadline_s=0.25, sleep=sleeps.append)
+    # every backoff is clipped to the remaining deadline, never 100s
+    assert sleeps and all(s <= 0.25 for s in sleeps)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint step validation: meta/npz key agreement
+# ---------------------------------------------------------------------------
+
+def test_step_dir_rejects_incomplete_leaf_crc32(corpus_engine, tmp_path):
+    """A meta.json that parses but whose leaf_crc32 map is missing npz
+    keys is not a safe restore target — the step must be screened out so
+    latest_step falls back to the previous valid one."""
+    from repro.checkpoint import checkpoint_steps
+
+    _, eng = corpus_engine
+    save_checkpoint(tmp_path, 1, eng.shards)
+    save_checkpoint(tmp_path, 2, eng.shards, keep=3)
+    step2 = tmp_path / "step_00000002"
+    meta = json.loads((step2 / "meta.json").read_text())
+    victim = sorted(meta["leaf_crc32"])[0]
+    del meta["leaf_crc32"][victim]
+    (step2 / "meta.json").write_text(json.dumps(meta))
+    assert not step_dir_valid(step2)
+    assert step_dir_valid(step2, deep=False)        # listing-only view
+    assert checkpoint_steps(tmp_path) == [1]
+    assert latest_step(tmp_path) == 1
+    # an absent map entirely (pre-integrity checkpoints) stays valid
+    meta.pop("leaf_crc32")
+    (step2 / "meta.json").write_text(json.dumps(meta))
+    assert step_dir_valid(step2)
