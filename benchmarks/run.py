@@ -18,8 +18,8 @@ from repro import obs
 
 from . import (bench_analytics, bench_construction, bench_corpus_store,
                bench_huffman, bench_index, bench_kernels, bench_multiary,
-               bench_rank_select, bench_robust, bench_wavelet_matrix,
-               bench_wavelet_tree)
+               bench_rank_select, bench_robust, bench_serving,
+               bench_wavelet_matrix, bench_wavelet_tree)
 from .common import RESULTS_DIR, run_meta, save
 
 SUITES = {
@@ -34,6 +34,7 @@ SUITES = {
     "index": ("index.json", bench_index.run),
     "analytics": ("analytics.json", bench_analytics.run),
     "robust": ("robust.json", bench_robust.run),
+    "serving": ("serving.json", bench_serving.run),
 }
 
 

@@ -75,6 +75,21 @@ echo "SLO gate pass/fail exit codes ✓"
 echo "== fault-injection smoke (chaos) =="
 python -m repro.launch.chaos --smoke
 
+# overload-hardened query front-end: drive the seeded bursty trace at 5×
+# pacing against a live QueryFrontend (admission queue, degradation
+# ladder, circuit breakers, epoch pinning), then gate the accepted-
+# request tail on the exported histograms — the declared serving SLO is
+# the CLI's default 250 ms deadline. (The deterministic FakeClock
+# overload scenarios — request storms, slow-shard breaker trips,
+# deadline storms, stuck swaps — run inside the chaos smoke above.)
+echo "== serving front-end overload smoke =="
+FE_DIR="$(mktemp -d)"
+python -m repro.launch.frontend --smoke --overload 5.0 \
+    --metrics-dir "$FE_DIR"
+python -m repro.launch.obs "$FE_DIR" --slo 'frontend.*:p99_ms<=250'
+rm -rf "$FE_DIR"
+echo "front-end overload + SLO gate ✓"
+
 # (fused-vs-oracle equivalence and the interpret-mode kernel tests —
 # tests/test_construction_fast.py, tests/test_segmented_construction.py,
 # tests/test_kernels.py — already run as part of the tier-1 suite above;

@@ -205,6 +205,48 @@ def sharded_range_quantile_fused(shards: WaveletMatrix, shard_bits: int,
                                            interpret=interpret)
 
 
+def sharded_range_quantile_bracket(shards: WaveletMatrix, shard_bits: int,
+                                   n: int, lo, hi, k, levels: int,
+                                   available=None):
+    """Reduced-refinement quantile: descend only the top ``levels`` of the
+    ``nbits`` bit levels and return ``(sym_lo, sym_hi)`` — the half-open
+    symbol bracket ``[sym_lo, sym_hi)`` that provably contains the exact
+    k-th smallest. ``levels == nbits`` collapses the bracket to
+    ``[sym, sym+1)`` (the exact answer); each level shaved halves the
+    descent cost (O(S·levels) rank probes) and doubles the bracket width
+    (``2^(nbits-levels)`` symbols). The degradation ladder's cheap
+    quantile rung: honest because the bracket is reported, not a point
+    estimate. Empty/uncovered ranges return ``(-1, -1)``.
+    """
+    S = _num_shards(shards)
+    nbits = shards.nbits
+    levels = max(0, min(int(levels), nbits))
+    los, his = mask_ranges(*local_ranges(shard_bits, S, n, lo, hi),
+                           available)
+    total = jnp.sum(his - los, axis=0)
+    k = jnp.clip(jnp.asarray(k, _I32), 0, jnp.maximum(total - 1, 0))
+    empty = total <= 0
+    sym = jnp.zeros_like(k)
+    for l in range(levels):
+        lo0, hi0 = jax.vmap(
+            lambda wm, a, b: wm_interval_zeros(wm, l, a, b)
+        )(shards, los, his)
+        z = jnp.sum(hi0 - lo0, axis=0)
+        bit = (k >= z).astype(_I32)
+        k = jnp.where(bit == 1, k - z, k)
+        sym = (sym << 1) | bit
+        los, his = jax.vmap(
+            lambda wm, a, b, z0, h0: wm_child_interval(wm, l, a, b, bit,
+                                                       z0, h0)
+        )(shards, los, his, lo0, hi0)
+    width = nbits - levels
+    sym_lo = sym << width
+    sym_hi = (sym + 1) << width
+    neg1 = jnp.asarray(-1, _I32)
+    return (jnp.where(empty, neg1, sym_lo),
+            jnp.where(empty, neg1, sym_hi))
+
+
 def sharded_range_topk(shards: WaveletMatrix, shard_bits: int, n: int,
                        lo, hi, k: int, available=None):
     """Exact global top-k: per-shard histograms sum, then one ``top_k``.
@@ -422,6 +464,38 @@ class ShardedAnalytics:
         obs.counter("analytics.path", op="quantile", path="xla").inc()
         return sharded_range_quantile(self.shards, self.shard_bits, self.n,
                                       lo, hi, k, self.available)
+
+    def range_quantile_bracket(self, lo, hi, k, levels: int):
+        """(sym_lo, sym_hi) bracketing the exact k-th smallest after a
+        descent truncated to ``levels`` bit levels — the degradation
+        ladder's reduced-refinement quantile (see
+        ``sharded_range_quantile_bracket``)."""
+        obs.counter("analytics.op", op="quantile_bracket").inc()
+        return sharded_range_quantile_bracket(self.shards, self.shard_bits,
+                                              self.n, lo, hi, k, levels,
+                                              self.available)
+
+    def probe_shard(self, s: int, clock=None) -> bool:
+        """Liveness probe of one shard: a minimal single-shard count that
+        honours any chaos-armed ``robust.faults.shard_latency`` stall
+        (slept on the injectable ``clock`` — real stall under the system
+        clock, instant logical stall under ``FakeClock``). The serving
+        front-end's circuit breakers hedge these probes under a timeout —
+        a stuck shard turns into an open breaker (degraded coverage)
+        instead of a stalled queue. Returns True on success.
+        """
+        from repro.robust.clock import SYSTEM_CLOCK
+        from repro.robust.faults import shard_latency
+        clock = clock if clock is not None else SYSTEM_CLOCK
+        delay = shard_latency(s)
+        if delay > 0:
+            clock.sleep(delay)
+        wm = self.shard(int(s))
+        out = range_ops.range_count(wm, jnp.asarray(0, _I32),
+                                    jnp.asarray(1, _I32),
+                                    jnp.asarray(0, _I32),
+                                    jnp.asarray(self.sigma, _I32))
+        return bool(jax.block_until_ready(out) >= 0)
 
     def range_count(self, lo, hi, sym_lo, sym_hi) -> jax.Array:
         obs.counter("analytics.op", op="count").inc()

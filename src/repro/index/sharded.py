@@ -106,6 +106,25 @@ class ShardedTextIndex:
     def shard(self, s: jax.Array) -> FMIndex:
         return jax.tree.map(lambda l: l[s], self.shards)
 
+    def probe_shard(self, s: int, clock=None) -> bool:
+        """Liveness probe of one shard: a minimal single-shard backward
+        search that honours any chaos-armed ``robust.faults.shard_latency``
+        stall (slept on the injectable ``clock``). The serving front-end's
+        circuit breakers hedge these probes under a timeout so a stuck
+        shard degrades coverage instead of stalling the queue. Returns
+        True on success.
+        """
+        from repro.robust.clock import SYSTEM_CLOCK
+        from repro.robust.faults import shard_latency
+        clock = clock if clock is not None else SYSTEM_CLOCK
+        delay = shard_latency(s)
+        if delay > 0:
+            clock.sleep(delay)
+        fm = self.shard(int(s))
+        pat = jnp.zeros((1, 1), _I32)
+        out = fm_count(fm, pat, jnp.ones((1,), _I32))
+        return bool(jax.block_until_ready(out)[0] >= 0)
+
     # ---- incremental ingest / hot swap -------------------------------
     def add_shards(self, new_shards: FMIndex, new_seams: jax.Array,
                    added_tokens: int, new_available=None

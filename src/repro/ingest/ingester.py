@@ -48,6 +48,7 @@ import numpy as np
 
 from repro import obs
 from repro.checkpoint.checkpoint import _flatten, _path_token
+from repro.robust.clock import SYSTEM_CLOCK, Clock
 from repro.robust.faults import check_crash_point, with_retry
 from repro.robust.integrity import IntegrityError, checksum_flat, verify_flat
 
@@ -117,9 +118,10 @@ class ShardIngester:
     re-feeds everything past the last committed/quarantined generation
     (at-least-once delivery + idempotent monotone generations = exactly
     -once corpus). ``retries``/``backoff_s``/``deadline_s`` bound the
-    per-shard build (full-jitter backoff); a permanently failing build is
-    quarantined — the stream keeps flowing and serving degrades to
-    coverage < 1 instead of crashing.
+    per-shard build (full-jitter backoff, measured on the injectable
+    ``clock``); a permanently failing build is quarantined — the stream
+    keeps flowing and serving degrades to coverage < 1 instead of
+    crashing.
     """
 
     def __init__(self, directory: str | Path, build_shard: Callable,
@@ -128,6 +130,7 @@ class ShardIngester:
                  seam_overlap: int = 0, jit_build: bool = False,
                  retries: int = 2, backoff_s: float = 0.01,
                  deadline_s: Optional[float] = None,
+                 clock: Clock = SYSTEM_CLOCK,
                  fsync: bool = True,
                  extra_meta: Optional[dict] = None):
         self.directory = Path(directory)
@@ -144,6 +147,7 @@ class ShardIngester:
         self.retries = retries
         self.backoff_s = backoff_s
         self.deadline_s = deadline_s
+        self.clock = clock
         self.fsync = fsync
         self.extra_meta = dict(extra_meta or {})
         self._raw_build = build_shard
@@ -325,7 +329,7 @@ class ShardIngester:
                 tree = with_retry(
                     lambda: self._built(true_tokens),
                     retries=self.retries, backoff_s=self.backoff_s,
-                    deadline_s=self.deadline_s)
+                    deadline_s=self.deadline_s, clock=self.clock)
             except Exception as e:                        # noqa: BLE001
                 # permanent build failure: the stream must keep flowing —
                 # journal the hole and serve around it (coverage < 1)

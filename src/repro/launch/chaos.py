@@ -31,6 +31,19 @@ on any failure):
 * ingest quarantine / hot swap    — permanently failing shard builds are
   quarantined (honest coverage bounds), and epoch-fenced generation
   swaps never show a query batch a mixed corpus
+* overload (serving front-end)    — a 5× request storm against the
+  bounded admission queue: shed requests get explicit rejections, served
+  requests beat their deadline or carry a degraded-mode tag whose
+  bounds/brackets contain the numpy oracle, accepted p99 stays within
+  the declared SLO
+* slow shard (front-end)          — chaos-injected per-shard latency
+  times out the hedged probes, the circuit breaker opens, and answers
+  match the availability-mask oracle until the half-open probe recovers
+* deadline storm                  — every hopeless request is explicitly
+  rejected before dispatch; nothing is silently dropped
+* stuck generation swap           — a swap whose drain fence never
+  clears stalls only the *swapper*: the front-end keeps serving (new
+  epoch), the pinned old session keeps its generation's truth
 """
 from __future__ import annotations
 
@@ -347,6 +360,222 @@ def run_ingest_scenarios(seed: int, scratch: Path, check: Check):
                      f"gen {gen0}→{gen1}, n {cut}→{eng_now.n}")
 
 
+def run_overload_scenarios(seed: int, check: Check):
+    """Serving front-end under overload, on a fake clock: request storms,
+    slow shards, deadline storms, stuck generation swaps. Every decision
+    (shed, degrade, breaker trip) is asserted against explicit rejections
+    and numpy oracles — overload must produce bounded, honest answers,
+    never silence or stalls.
+    """
+    import threading
+
+    from repro.ingest.serving import GenerationServer
+    from repro.robust import FakeClock, inject_shard_latency
+    from repro.serving import (FrontendConfig, LadderConfig, QueryFrontend,
+                               ShedError)
+
+    rng = np.random.default_rng(seed)
+    n, vocab, shard_bits = 1 << 11, 64, 8
+    toks = rng.integers(0, vocab, n).astype(np.uint32)
+    eng = build_sharded_analytics(toks, vocab, shard_bits=shard_bits)
+    srt = np.sort(toks)
+    half_exact = int(np.sum(toks < vocab // 2))
+
+    # -- 5× request storm: bounded, honest, explicit ----------------------
+    # One modeled worker: a batch of b requests occupies it b·service_s of
+    # logical time, during which arrivals (at 5× the service rate) pile
+    # into the bounded queue — the sustained-overload regime where every
+    # defense (queue_full, over_budget, expired, the ladder) must engage.
+    with obs.span("chaos.scenario", scenario="overload_storm"):
+        clock = FakeClock()
+        fe = QueryFrontend(
+            GenerationServer(eng),
+            config=FrontendConfig(capacity=64, buckets=(8, 32),
+                                  probe_shards=False,
+                                  ladder=LadderConfig(up_pressure=0.5)),
+            clock=clock)
+        service_s = 2e-3             # modeled per-request service cost
+        slo_s = 0.08                 # per-request deadline = declared SLO
+        for _ in range(30):          # converge the sojourn EWMA
+            fe.queue.observe_service(8 * service_s, 8)
+        arrival_s = service_s / 5.0  # 5× the modeled capacity
+        storm = []
+        next_free = 0.0
+        for i in range(400):
+            if i % 2 == 0:
+                t = fe.submit("count", 0, n, sym_lo=0, sym_hi=vocab // 2,
+                              deadline_s=slo_s)
+                storm.append(("count", 0, t))
+            else:
+                k = int(rng.integers(0, n))
+                t = fe.submit("quantile", 0, n, k=k, deadline_s=slo_s)
+                storm.append(("quantile", k, t))
+            clock.advance(arrival_s)
+            if clock.now() >= next_free:
+                served = fe.pump()
+                next_free = clock.now() + served * service_s
+        while True:                  # drain the tail
+            if clock.now() < next_free:
+                clock.advance(next_free - clock.now())
+            served = fe.pump()
+            if not served:
+                break
+            next_free = clock.now() + served * service_s
+        st = fe.stats()
+        reasons = set()
+        lats, bad = [], []
+        degraded = 0
+        for op, k, t in storm:
+            if t.shed:
+                try:
+                    t.result(0)
+                except ShedError as e:
+                    reasons.add(e.reason)
+                continue
+            a = t.result(0)
+            lats.append(a.latency_s)
+            if a.degraded:
+                degraded += 1
+            if not (a.deadline_met or a.degraded):
+                bad.append((op, "late exact answer"))
+            if op == "count":
+                if a.mode == "exact":
+                    ok_v = a.value == half_exact
+                else:
+                    lo_c, up_c = a.value
+                    ok_v = lo_c <= half_exact <= up_c
+            else:
+                oracle = int(srt[k])
+                if a.mode == "exact":
+                    ok_v = a.value == oracle
+                else:
+                    lo_s, hi_s = a.value
+                    ok_v = lo_s <= oracle < hi_s
+            if not ok_v:
+                bad.append((op, a.mode, a.value))
+        accounted = (st["submitted"] == 400
+                     and st["submitted"] == st["served"] + st["total_shed"]
+                     and st["queued"] == 0)
+        shed_rate = st["total_shed"] / 400
+        p99 = float(np.percentile(lats, 99)) if lats else 0.0
+        check.record(
+            "overload storm: bounded queue, explicit sheds, full accounting",
+            accounted and st["total_shed"] > 0
+            and reasons <= {"queue_full", "over_budget", "expired"},
+            f"served {st['served']}, shed {st['total_shed']} "
+            f"({shed_rate:.0%}: {sorted(reasons)})")
+        check.record(
+            "overload answers honest: deadline met or degraded-tagged, "
+            "bounds bracket oracle",
+            not bad and degraded > 0,
+            f"{degraded} degraded answers, {len(bad)} violations")
+        check.record("overload accepted p99 within SLO",
+                     bool(lats) and p99 <= slo_s,
+                     f"p99 {p99 * 1e3:.1f}ms ≤ {slo_s * 1e3:.0f}ms "
+                     f"over {len(lats)} accepted")
+        fe.breakers.close_pool()
+
+    # -- chaos shard latency: hedged timeout → breaker → mask oracle ------
+    with obs.span("chaos.scenario", scenario="overload_slow_shard"):
+        clock = FakeClock()
+        fe = QueryFrontend(GenerationServer(eng),
+                           config=FrontendConfig(probe_shards=True),
+                           clock=clock)
+        with inject_shard_latency(3, 9.0):
+            for _ in range(fe.config.breaker.fail_threshold):
+                fe.submit("count", 0, n, deadline_s=1e6)
+                fe.pump()
+        opened = fe.stats()["open_breakers"] == [3]
+        t = fe.submit("count", 0, n, deadline_s=1e6)
+        fe.pump()
+        a = t.result(0)
+        oracle = int(eng.drop_shards([3]).range_count(0, n, 0, vocab))
+        clock.advance(fe.config.breaker.reset_after_s + 1.0)
+        fe.submit("count", 0, n, deadline_s=1e6)
+        fe.pump()
+        recovered = fe.stats()["open_breakers"] == []
+        check.record(
+            "slow shard: breaker opens, answers match availability-mask "
+            "oracle, half-open recovers",
+            opened and recovered and a.degraded and a.value == oracle
+            and float(a.coverage) < 1.0,
+            f"coverage {float(a.coverage):.2f}, count {a.value} "
+            f"(oracle {oracle})")
+        fe.breakers.close_pool()
+
+    # -- deadline storm: all hopeless work explicitly rejected ------------
+    with obs.span("chaos.scenario", scenario="deadline_storm"):
+        clock = FakeClock()
+        fe = QueryFrontend(GenerationServer(eng),
+                           config=FrontendConfig(probe_shards=False),
+                           clock=clock)
+        storm = [fe.submit("count", 0, n, deadline_s=0.01)
+                 for _ in range(32)]
+        clock.advance(1.0)           # every deadline blows while queued
+        while fe.pump():
+            pass
+        reasons = set()
+        for t in storm:
+            try:
+                t.result(0)
+                reasons.add("SERVED")
+            except ShedError as e:
+                reasons.add(e.reason)
+        check.record(
+            "deadline storm: every request explicitly rejected pre-dispatch",
+            all(t.shed for t in storm) and fe.stats()["served"] == 0
+            and "SERVED" not in reasons,
+            f"reasons {sorted(reasons)}")
+        fe.breakers.close_pool()
+
+    # -- stuck swap_generation: stalls the swapper, never the queue -------
+    with obs.span("chaos.scenario", scenario="stuck_swap"):
+        srv = GenerationServer(eng)
+        clock = FakeClock()
+        fe = QueryFrontend(srv, config=FrontendConfig(probe_shards=False),
+                           clock=clock)
+        eng2 = build_sharded_analytics(
+            np.concatenate([toks, toks]), vocab, shard_bits=shard_bits)
+        entered, release = threading.Event(), threading.Event()
+        old_answer = []
+
+        def holder():
+            with srv.session() as (_, e0):
+                old_answer.append(int(e0.range_count(0, e0.n, 0, vocab)))
+                entered.set()
+                release.wait(30)
+
+        h = threading.Thread(target=holder)
+        h.start()
+        entered.wait(5)
+        swap_done = threading.Event()
+
+        def swapper():
+            srv.swap_generation(eng2, wait_drain=True, timeout_s=30)
+            swap_done.set()
+
+        sw = threading.Thread(target=swapper)
+        sw.start()
+        answers = []
+        for _ in range(4):           # swapper is fenced on the holder…
+            t = fe.submit("count", 0, 2 * n, deadline_s=10.0)
+            fe.pump()
+            answers.append(t.result(5))
+        stuck = not swap_done.is_set()
+        release.set()
+        h.join(10)
+        sw.join(10)
+        served_new = all(a.generation == 1 and a.value == 2 * n
+                         for a in answers)
+        check.record(
+            "stuck swap: front-end serves on (new epoch), pinned session "
+            "keeps old truth, fence completes on drain",
+            stuck and served_new and old_answer == [n]
+            and swap_done.is_set(),
+            f"{len(answers)} answers served while fence blocked")
+        fe.breakers.close_pool()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -396,6 +625,9 @@ def main():
         print("streaming-ingest crash injection:")
         with obs.span("chaos.ingest"):
             run_ingest_scenarios(args.seed, scratch / "ingest", check)
+        print("serving front-end overload injection:")
+        with obs.span("chaos.overload"):
+            run_overload_scenarios(args.seed, check)
     finally:
         if not args.dir:
             shutil.rmtree(scratch, ignore_errors=True)

@@ -1,4 +1,8 @@
-"""Serving CLI: batched prefill + autoregressive decode.
+"""*Model*-serving CLI: batched prefill + autoregressive decode.
+
+(The analytics *query* front-end — admission control, load shedding,
+degradation ladder over the sharded wavelet-matrix engine — has its own
+CLI in ``repro.launch.frontend``.)
 
 PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
     --batch 4 --prompt-len 64 --decode-steps 32

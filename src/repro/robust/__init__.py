@@ -14,15 +14,21 @@ underlying bitmaps — turned into an operational property:
   original builders: a successful repair is bit-identical to the
   pre-fault engine.
 * ``faults``    — seedable chaos harness (leaf bit-flips, snapshot
-  truncation/deletion, stale partial writes) + bounded retry/backoff.
+  truncation/deletion, stale partial writes, per-shard latency) +
+  bounded retry/backoff.
+* ``clock``     — the one injectable monotonic ``Clock`` every deadline
+  in the stack (retry budgets, ingest build deadlines, front-end
+  request deadlines) measures against; ``FakeClock`` for tests.
 
 Degraded-mode serving (per-shard availability masks, coverage-reported
 answers) lives on the engines themselves — ``analytics.engine`` and
 ``index.sharded``.
 """
+from .clock import SYSTEM_CLOCK, Clock, FakeClock
 from .faults import (CrashInjected, corrupt_snapshot_leaf, crash_after,
                      check_crash_point, delete_file, delete_step,
-                     flip_leaf_bit, inject_partial_tmp, truncate_file,
+                     flip_leaf_bit, inject_partial_tmp,
+                     inject_shard_latency, shard_latency, truncate_file,
                      with_retry)
 from .integrity import (IntegrityError, checksum_array, checksum_flat,
                         tree_checksums, trees_identical, verify_flat)
@@ -47,5 +53,7 @@ __all__ = [
     "repair_wavelet_tree",
     "CrashInjected", "corrupt_snapshot_leaf", "crash_after",
     "check_crash_point", "delete_file", "delete_step", "flip_leaf_bit",
-    "inject_partial_tmp", "truncate_file", "with_retry",
+    "inject_partial_tmp", "inject_shard_latency", "shard_latency",
+    "truncate_file", "with_retry",
+    "Clock", "FakeClock", "SYSTEM_CLOCK",
 ]

@@ -19,25 +19,33 @@ Two fault surfaces, matching how corruption reaches a serving engine:
   chaos sweep kills the ingester after *every* step this way and asserts
   recovery converges to the clean-rebuild state.
 
+* **Per-shard latency faults** — ``inject_shard_latency`` arms a delay
+  against one shard id; instrumented per-shard probe paths (the serving
+  front-end's circuit breakers) call ``shard_latency(s)`` and stall by
+  that much — the "one slow replica" failure mode hedging must survive.
+
 Everything takes an explicit seed; tests and the ``launch.chaos`` CLI
 replay identical fault sequences. ``with_retry`` is the bounded
 retry/backoff wrapper the restore → rebuild escalation uses around shard
 builds — full-jitter exponential backoff under an optional wall-clock
-``deadline_s``.
+``deadline_s``. All elapsed-time/sleep behaviour goes through one
+injectable ``robust.Clock`` (``clock=FakeClock()`` makes every deadline
+decision deterministic).
 """
 from __future__ import annotations
 
 import contextlib
 import json
 import shutil
-import time
 from pathlib import Path
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro import obs
+
+from .clock import SYSTEM_CLOCK, Clock
 
 _SEP = "/"
 
@@ -238,6 +246,42 @@ def check_crash_point(step: str) -> None:
 
 
 # --------------------------------------------------------------------------
+# per-shard latency injection (slow-replica fault model)
+# --------------------------------------------------------------------------
+
+_shard_latency: Dict[int, float] = {}
+
+
+@contextlib.contextmanager
+def inject_shard_latency(shard: int, seconds: float):
+    """Arm a latency fault against one shard id for the ``with`` scope.
+
+    Instrumented per-shard paths (the front-end's circuit-breaker
+    probes) call :func:`shard_latency` and stall by the armed amount —
+    the "one slow replica stalls the fleet" failure mode that hedged
+    timeouts must convert into degraded coverage instead of queue
+    stalls. Nested injections against distinct shards compose.
+    """
+    prev = _shard_latency.get(shard)
+    _shard_latency[shard] = float(seconds)
+    obs.counter("robust.fault", kind="shard_latency").inc()
+    obs.event("fault.shard_latency", kind="fault", shard=shard,
+              seconds=seconds)
+    try:
+        yield
+    finally:
+        if prev is None:
+            _shard_latency.pop(shard, None)
+        else:
+            _shard_latency[shard] = prev
+
+
+def shard_latency(shard: int) -> float:
+    """Armed extra latency (seconds) for ``shard``; 0.0 when unarmed."""
+    return _shard_latency.get(int(shard), 0.0)
+
+
+# --------------------------------------------------------------------------
 # bounded retry / backoff
 # --------------------------------------------------------------------------
 
@@ -248,7 +292,7 @@ def with_retry(fn: Callable, *, retries: int = 2, backoff_s: float = 0.05,
                jitter: bool = True,
                deadline_s: Optional[float] = None,
                rng: Optional[np.random.Generator] = None,
-               sleep: Callable[[float], None] = time.sleep):
+               clock: Clock = SYSTEM_CLOCK):
     """Call ``fn()`` with up to ``retries`` re-attempts, full-jitter
     exponential backoff, and an optional wall-clock deadline.
 
@@ -261,18 +305,19 @@ def with_retry(fn: Callable, *, retries: int = 2, backoff_s: float = 0.05,
     remains, and every sleep is clipped so the deadline is never
     overshot by a backoff. Re-raises the last exception once either
     budget is spent. ``on_retry(attempt, exc)`` is invoked before each
-    sleep — callers log through it. ``rng``/``sleep`` are injectable for
+    sleep — callers log through it. ``rng`` and ``clock`` (the shared
+    ``robust.Clock`` — elapsed time *and* sleeping) are injectable for
     deterministic tests.
     """
     rng = rng if rng is not None else np.random.default_rng()
-    start = time.monotonic()
+    start = clock.now()
     last: BaseException | None = None
     for attempt in range(retries + 1):
         try:
             return fn()
         except tuple(exceptions) as e:          # noqa: PERF203
             last = e
-            elapsed = time.monotonic() - start
+            elapsed = clock.now() - start
             out_of_time = (deadline_s is not None
                            and elapsed >= deadline_s)
             if attempt == retries or out_of_time:
@@ -290,5 +335,5 @@ def with_retry(fn: Callable, *, retries: int = 2, backoff_s: float = 0.05,
                 delay = float(rng.uniform(0.0, delay))
             if deadline_s is not None:
                 delay = min(delay, max(0.0, deadline_s - elapsed))
-            sleep(delay)
+            clock.sleep(delay)
     raise last  # unreachable; keeps type checkers honest

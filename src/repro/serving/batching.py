@@ -1,0 +1,96 @@
+"""Pad-and-bucket batch execution: ragged streams → pre-compiled shapes.
+
+The kernels underneath (vmapped sharded descents, the fused Pallas
+quantile) want fixed-shape batches; a ragged request stream wants to be
+served *now*. The runner reconciles the two:
+
+* **buckets** — every batch is padded up to the smallest of a few fixed
+  sizes (default 8/32/128), so the jit cache holds at most
+  ``len(buckets)`` entries per (op, ladder-level) instead of one per
+  ragged batch size. Padding queries are the neutral ``lo == hi == 0``
+  empty range, which every op answers harmlessly (count 0, quantile −1,
+  empty top-k) and which costs one lane of an already-launched kernel.
+* **double-buffered staging** — per bucket, two pinned host arrays are
+  alternated so the next batch can be packed while the previous one's
+  device transfer is still in flight; the device copy is **donated** to
+  the jitted call (non-CPU backends), letting XLA reuse the query
+  buffer's memory for outputs instead of allocating fresh.
+* **jit cache** — compiled executables are keyed ``(op-key, bucket)``.
+  The engine rides along as a pytree *argument*, so a generation hot-swap
+  with unchanged geometry hits the existing executable; only a geometry
+  change (new ``n``/shard count — static fields) or an availability-mask
+  appearance (pytree structure change) retraces.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+
+_Key = Tuple[Any, int]
+
+
+class BatchRunner:
+    """Jit-cached, bucket-padded executor for (4, B) int32 query blocks."""
+
+    def __init__(self, buckets: Tuple[int, ...] = (8, 32, 128)):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"invalid buckets {buckets!r}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self._jit: Dict[_Key, Callable] = {}
+        self._staging: Dict[int, list] = {}   # bucket -> [buf0, buf1, flip]
+        self._donate = jax.default_backend() != "cpu"
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest bucket ≥ n (the largest bucket caps batch size —
+        callers split bigger batches)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    def _stage(self, bucket: int, qargs: np.ndarray, n: int) -> np.ndarray:
+        if bucket not in self._staging:
+            self._staging[bucket] = [np.zeros((4, bucket), np.int32),
+                                     np.zeros((4, bucket), np.int32), 0]
+        slot = self._staging[bucket]
+        buf = slot[slot[2]]
+        slot[2] ^= 1
+        buf[:, :n] = qargs[:, :n]
+        buf[:, n:] = 0                      # neutral lo == hi == 0 pads
+        return buf
+
+    def run(self, key: Any, fn: Callable, engine: Any,
+            qargs: np.ndarray, n: int):
+        """Execute ``fn(engine, q)`` on the bucket-padded device block.
+
+        ``qargs`` is (4, n) int32 (op-specific lanes); returns ``fn``'s
+        output pytree with leading batch dim = bucket (callers slice
+        ``[:n]``).
+        """
+        if n <= 0:
+            raise ValueError("empty batch")
+        if n > self.max_batch:
+            raise ValueError(f"batch {n} exceeds max bucket "
+                             f"{self.max_batch}")
+        bucket = self.bucket_for(n)
+        buf = self._stage(bucket, qargs, n)
+        jkey = (key, bucket)
+        if jkey not in self._jit:
+            obs.counter("serve.frontend.compile").inc()
+            donate = (1,) if self._donate else ()
+            self._jit[jkey] = jax.jit(fn, donate_argnums=donate)
+        out = self._jit[jkey](engine, jnp.asarray(buf))
+        return jax.tree.map(np.asarray, jax.block_until_ready(out))
+
+    @property
+    def compiled(self) -> int:
+        return len(self._jit)

@@ -18,7 +18,7 @@ from repro.analytics import (build_sharded_analytics, load_analytics,
 from repro.checkpoint import (latest_step, restore_checkpoint,
                               save_checkpoint, step_dir_valid)
 from repro.index import build_sharded_index
-from repro.robust import (IntegrityError, checksum_array,
+from repro.robust import (FakeClock, IntegrityError, checksum_array,
                           classify_bad_keys, corrupt_snapshot_leaf,
                           delete_file, flip_leaf_bit, inject_partial_tmp,
                           is_primary_key, repair_analytics,
@@ -395,36 +395,36 @@ def test_with_retry_full_jitter_draws_within_envelope():
     """Sleep before attempt a+1 is uniform on [0, backoff·2^a] (full
     jitter) — deterministic under an injected rng, and reproducing the
     same rng reproduces the exact draws."""
-    sleeps = []
+    clock = FakeClock()
 
     def always_fails():
         raise OSError("transient")
 
     with pytest.raises(OSError):
         with_retry(always_fails, retries=4, backoff_s=0.1,
-                   rng=np.random.default_rng(42), sleep=sleeps.append)
+                   rng=np.random.default_rng(42), clock=clock)
     caps = [0.1 * (2 ** a) for a in range(4)]
-    assert len(sleeps) == 4
-    assert all(0.0 <= s <= c for s, c in zip(sleeps, caps))
+    assert len(clock.sleeps) == 4
+    assert all(0.0 <= s <= c for s, c in zip(clock.sleeps, caps))
     # full jitter, not the deterministic cap
-    assert any(s < c for s, c in zip(sleeps, caps))
-    replay = []
+    assert any(s < c for s, c in zip(clock.sleeps, caps))
+    replay = FakeClock()
     with pytest.raises(OSError):
         with_retry(always_fails, retries=4, backoff_s=0.1,
-                   rng=np.random.default_rng(42), sleep=replay.append)
-    assert replay == sleeps
+                   rng=np.random.default_rng(42), clock=replay)
+    assert replay.sleeps == clock.sleeps
 
 
 def test_with_retry_jitter_off_is_deterministic_cap():
-    sleeps = []
+    clock = FakeClock()
 
     def always_fails():
         raise OSError("transient")
 
     with pytest.raises(OSError):
         with_retry(always_fails, retries=3, backoff_s=0.05, jitter=False,
-                   sleep=sleeps.append)
-    assert sleeps == [0.05, 0.1, 0.2]
+                   clock=clock)
+    assert clock.sleeps == [0.05, 0.1, 0.2]
 
 
 def test_with_retry_deadline_cuts_retry_budget():
@@ -442,16 +442,16 @@ def test_with_retry_deadline_cuts_retry_budget():
 
 
 def test_with_retry_deadline_clips_sleeps():
-    sleeps = []
+    clock = FakeClock()
 
     def always_fails():
         raise OSError("transient")
 
     with pytest.raises(OSError):
         with_retry(always_fails, retries=5, backoff_s=100.0, jitter=False,
-                   deadline_s=0.25, sleep=sleeps.append)
+                   deadline_s=0.25, clock=clock)
     # every backoff is clipped to the remaining deadline, never 100s
-    assert sleeps and all(s <= 0.25 for s in sleeps)
+    assert clock.sleeps and all(s <= 0.25 for s in clock.sleeps)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,361 @@
+"""Serving front-end: admission, deadlines, ladder, breakers, hot swap.
+
+Everything timing-dependent runs on a ``FakeClock`` — deadlines, CoDel
+sojourn estimates, ladder cooldowns, and chaos-injected shard latency all
+advance logical time deterministically, so the tests assert exact shed /
+degrade / breaker decisions with zero real sleeping. The one exception is
+the concurrent hot-swap test, which (mirroring ``test_ingest``) runs real
+threads against the system clock.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analytics.engine import build_sharded_analytics
+from repro.ingest.serving import GenerationServer
+from repro.robust import FakeClock, inject_shard_latency
+from repro.serving import (AdmissionQueue, BatchRunner, FrontendConfig,
+                           LadderConfig, QueryFrontend, Request, ShedError,
+                           Ticket)
+from repro.serving.ladder import DegradeLadder
+
+N, SIGMA, SHARD_BITS = 1024, 64, 8
+
+
+@pytest.fixture(scope="module")
+def tokens():
+    return np.random.default_rng(7).integers(0, 50, N).astype(np.uint32)
+
+
+@pytest.fixture(scope="module")
+def engine(tokens):
+    return build_sharded_analytics(tokens, SIGMA, shard_bits=SHARD_BITS)
+
+
+@pytest.fixture
+def frontend(engine):
+    """Factory: (clock, **config overrides) → started-nothing frontend;
+    every instance's probe pool is shut down at teardown."""
+    made = []
+
+    def make(clock=None, **over):
+        over.setdefault("probe_shards", False)
+        fe = QueryFrontend(GenerationServer(engine),
+                           config=FrontendConfig(**over),
+                           clock=clock or FakeClock())
+        made.append(fe)
+        return fe
+
+    yield make
+    for fe in made:
+        fe.breakers.close_pool()
+
+
+def _drain(fe, want):
+    served = 0
+    for _ in range(1000):
+        served += fe.pump()
+        if served >= want:
+            return served
+    raise AssertionError(f"only {served}/{want} served")
+
+
+# ---------------------------------------------------------------------------
+# admission queue: bounds, reject-early, shed-before-dispatch
+# ---------------------------------------------------------------------------
+
+def test_queue_bounded_and_explicitly_rejecting(frontend):
+    fe = frontend(capacity=4)
+    tickets = [fe.submit("count", 0, N, deadline_s=10.0) for _ in range(9)]
+    shed = [t for t in tickets if t.shed]
+    assert len(shed) == 5 and fe.queue.depth == 4
+    with pytest.raises(ShedError) as ei:
+        shed[0].result(0)
+    assert ei.value.reason == "queue_full"
+    # every admitted request still resolves
+    _drain(fe, 4)
+    for t in tickets:
+        assert t.done()
+
+
+def test_codel_over_budget_shed_at_submit(frontend):
+    """A request whose deadline cannot survive the estimated sojourn is
+    rejected in-line (reject-early), not left to time out in the queue."""
+    fe = frontend(capacity=64)
+    fe.queue.observe_service(5.0, 1)            # ~1s/request after EWMA
+    assert fe.queue.service_s > 0.5
+    backlog = [fe.submit("count", 0, N, deadline_s=60.0) for _ in range(10)]
+    t = fe.submit("count", 0, N, deadline_s=0.5)   # 10 × ~1s wait ahead
+    assert t.shed
+    with pytest.raises(ShedError) as ei:
+        t.result(0)
+    assert ei.value.reason == "over_budget"
+    assert ei.value.est_wait_s > 0.5
+    assert not any(b.shed for b in backlog)
+
+
+def test_expired_requests_shed_before_dispatch(frontend):
+    """Dispatch never wastes kernel time on dead requests: expired ones
+    are shed with explicit rejections and live ones still serve."""
+    clock = FakeClock()
+    fe = frontend(clock=clock)
+    dead = fe.submit("count", 0, N, deadline_s=0.3)
+    clock.advance(0.5)
+    live = fe.submit("count", 0, N, deadline_s=10.0)
+    assert fe.pump() == 1                       # only the live one ran
+    assert dead.shed and fe.queue.shed_counts["expired"] == 1
+    with pytest.raises(ShedError) as ei:
+        dead.result(0)
+    assert ei.value.reason == "expired"
+    assert live.result(0).deadline_met
+    st = fe.stats()
+    assert st["submitted"] == st["served"] + st["total_shed"]
+
+
+def test_ticket_timeout_and_unknown_op(frontend):
+    fe = frontend()
+    t = fe.submit("count", 0, N, deadline_s=10.0)
+    with pytest.raises(TimeoutError):
+        t.result(timeout=0.01)                  # never pumped
+    with pytest.raises(ValueError):
+        fe.submit("median", 0, N)
+    with pytest.raises(ValueError):
+        fe.submit("quantile", 0, N)             # k required
+    fe.pump()
+    assert t.result(0).mode == "exact"
+
+
+# ---------------------------------------------------------------------------
+# deadline propagation through batching
+# ---------------------------------------------------------------------------
+
+def test_deadline_miss_tagged_not_dropped(frontend, engine):
+    """A request admitted in time but finished late (chaos latency on the
+    batch path) resolves with ``deadline_met=False`` and bumps the miss
+    counter — accepted work is answered, and honestly timestamped."""
+    clock = FakeClock()
+    fe = frontend(clock=clock, probe_shards=True)
+    with inject_shard_latency(0, 2.0):          # probe advances the clock
+        t = fe.submit("count", 0, N, deadline_s=1.0)
+        fe.pump()
+    a = t.result(0)
+    assert a.deadline_met is False
+    assert a.latency_s >= 2.0
+    assert fe.stats()["deadline_misses"] == 1
+
+
+def test_deadline_met_within_budget(frontend):
+    clock = FakeClock()
+    fe = frontend(clock=clock)
+    t = fe.submit("count", 0, N, deadline_s=1.0)
+    clock.advance(0.25)                         # queue wait, within budget
+    fe.pump()
+    a = t.result(0)
+    assert a.deadline_met and a.latency_s == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder
+# ---------------------------------------------------------------------------
+
+def test_ladder_monotone_within_burst():
+    """Pressure above ``down_pressure`` ⇒ the level can only hold or
+    climb; a downgrade needs ``cooldown_s`` of sustained calm."""
+    clock = FakeClock()
+    lad = DegradeLadder(LadderConfig(up_pressure=0.75, down_pressure=0.25,
+                                     cooldown_s=1.0), clock=clock)
+    levels = []
+    for p in [0.8, 0.5, 0.9, 0.4, 0.8, 0.3]:    # burst: never calm
+        levels.append(lad.observe(p))
+        clock.advance(0.2)
+    assert levels == sorted(levels) and levels[-1] == 2
+    # calm but inside cooldown: still holds
+    assert lad.observe(0.0) == 2
+    clock.advance(1.5)
+    assert lad.observe(0.0) == 1                # one rung per window
+    assert lad.observe(0.0) == 1
+    clock.advance(1.5)
+    assert lad.observe(0.0) == 0
+
+
+def test_burst_degrades_answers_and_tags_them(frontend, tokens):
+    """Overload flips quantile answers to tagged brackets that still
+    contain the exact numpy-oracle answer."""
+    fe = frontend(capacity=16, ladder=LadderConfig(up_pressure=0.5))
+    tickets = [fe.submit("quantile", 0, N, k=i * 37, deadline_s=50.0)
+               for i in range(14)]
+    _drain(fe, 14)
+    srt = np.sort(tokens)
+    degraded = 0
+    for i, t in enumerate(tickets):
+        a = t.result(0)
+        oracle = int(srt[i * 37])
+        if a.mode == "exact":
+            assert a.value == oracle
+        else:
+            assert a.mode == "quantile_bracket" and a.degraded
+            lo, hi = a.value
+            assert lo <= oracle < hi
+            degraded += 1
+    assert degraded > 0
+
+
+def test_op_variants_bracket_numpy_oracle(frontend, tokens):
+    """Every ladder rung of every op is honest against numpy, including
+    the deepest one."""
+    import jax.numpy as jnp
+    fe = frontend()
+    eng = fe.server.engine
+    lo, hi = 37, 1001
+    q = jnp.asarray(np.array([[lo, lo, lo], [hi, hi, hi],
+                              [5, 200, 0], [30, 700, 0]], np.int32))
+    window = tokens[lo:hi]
+    for level in (1, 2):
+        mode, fn = fe._op_fn("count", level)
+        lo_c, up_c, cov = fn(eng, q)
+        exact = int(np.sum((window >= 5) & (window < 30)))
+        assert mode == "count_bounds"
+        assert int(lo_c[0]) <= exact <= int(up_c[0])
+        assert float(cov[0]) == 1.0
+
+        mode, fn = fe._op_fn("quantile", level)
+        a, b, _ = fn(eng, q)
+        assert mode == "quantile_bracket"
+        oracle = int(np.sort(window)[200])
+        assert int(a[1]) <= oracle < int(b[1])
+
+        mode, fn = fe._op_fn("topk", level)
+        syms, counts, _ = fn(eng, q)
+        assert mode == "topk_greedy"
+        hist = np.bincount(window, minlength=SIGMA)
+        for s, c in zip(np.asarray(syms[2]), np.asarray(counts[2])):
+            if s >= 0:                      # greedy counts are true counts
+                assert hist[int(s)] == int(c)
+
+
+# ---------------------------------------------------------------------------
+# batching: buckets, padding neutrality, jit reuse
+# ---------------------------------------------------------------------------
+
+def test_bucket_padding_is_neutral_and_cache_reused(frontend, tokens):
+    fe = frontend(buckets=(4, 16))
+    assert fe.runner.bucket_for(3) == 4 and fe.runner.bucket_for(9) == 16
+    t3 = [fe.submit("count", i, N - i, deadline_s=10.0) for i in range(3)]
+    fe.pump()
+    assert fe.runner.compiled == 1              # bucket 4
+    t2 = [fe.submit("count", i, N - i, deadline_s=10.0) for i in range(2)]
+    fe.pump()
+    assert fe.runner.compiled == 1              # same bucket, cache hit
+    for i, t in enumerate(t3 + t2):
+        i = i % 3 if i < 3 else i - 3
+        exact = int(np.sum(tokens[i:N - i] < SIGMA))
+        assert t.result(0).value == exact
+
+
+def test_mixed_ops_batch_homogeneously(frontend):
+    """One pump serves one op; other ops stay queued in order."""
+    fe = frontend()
+    tc = fe.submit("count", 0, N, deadline_s=10.0)
+    tq = fe.submit("quantile", 0, N, k=5, deadline_s=10.0)
+    tc2 = fe.submit("count", 0, N, deadline_s=10.0)
+    assert fe.pump() == 2                       # both counts
+    assert tc.done() and tc2.done() and not tq.done()
+    assert fe.pump() == 1
+    assert tq.done()
+
+
+# ---------------------------------------------------------------------------
+# hedged shard timeout vs availability-mask oracle
+# ---------------------------------------------------------------------------
+
+def test_slow_shard_opens_breaker_matches_drop_shards_oracle(frontend,
+                                                             engine):
+    """A chaos-stalled shard times out its hedged probe, the breaker
+    opens, and from then on every answer equals the ``drop_shards``
+    availability-mask oracle (PR 6 semantics) with coverage < 1."""
+    clock = FakeClock()
+    fe = frontend(clock=clock, probe_shards=True)
+    thresh = fe.config.breaker.fail_threshold
+    with inject_shard_latency(2, 9.0):
+        for _ in range(thresh):
+            t = fe.submit("count", 0, N, deadline_s=1e6)
+            fe.pump()
+    assert fe.stats()["open_breakers"] == [2]
+    t = fe.submit("count", 0, N, deadline_s=1e6)
+    fe.pump()
+    a = t.result(0)
+    oracle_eng = engine.drop_shards([2])
+    assert a.value == int(oracle_eng.range_count(0, N, 0, SIGMA))
+    assert a.degraded and a.coverage == pytest.approx(0.75)
+    # recovery: past the reset window the half-open probe closes it
+    clock.advance(fe.config.breaker.reset_after_s + 1)
+    fe.submit("count", 0, N, deadline_s=1e6)
+    fe.pump()
+    assert fe.stats()["open_breakers"] == []
+
+
+# ---------------------------------------------------------------------------
+# epoch-pinned serving across hot swaps (real threads, system clock)
+# ---------------------------------------------------------------------------
+
+def test_concurrent_hot_swap_answers_pin_one_generation(tokens):
+    """Mirrors ``test_ingest.test_hot_swap_under_concurrent_queries``:
+    with the worker thread pumping and generations swapping live, every
+    answer's value matches the oracle of the generation it is tagged
+    with — never a mixed corpus."""
+    shard = 1 << SHARD_BITS
+    engines = {g: build_sharded_analytics(tokens[:(g + 2) * shard], SIGMA,
+                                          shard_bits=SHARD_BITS)
+               for g in range(3)}
+    expected = {g: (g + 2) * shard for g in range(3)}
+    srv = GenerationServer(engines[0])
+    fe = QueryFrontend(srv, config=FrontendConfig(probe_shards=False,
+                                                  capacity=2048))
+    fe.start()
+    tickets = []
+    try:
+        stop = threading.Event()
+
+        def swapper():
+            for g in (1, 2):
+                srv.swap_generation(engines[g], wait_drain=True,
+                                    timeout_s=30)
+            stop.set()
+
+        sw = threading.Thread(target=swapper)
+        sw.start()
+        while not stop.is_set() or len(tickets) < 50:
+            tickets.append(fe.submit("count", 0, 2 ** 30,
+                                     deadline_s=30.0))
+            if len(tickets) > 3000:
+                break
+        sw.join()
+    finally:
+        fe.stop(drain=True)
+    gens_seen = set()
+    for t in tickets:
+        try:
+            a = t.result(5)
+        except ShedError:
+            continue
+        gens_seen.add(a.generation)
+        assert a.value == expected[a.generation], (
+            a.generation, a.value, expected[a.generation])
+    assert 2 in gens_seen                   # the final generation served
+    assert srv.generation == 2
+
+
+def test_stats_accounting_identity(frontend):
+    clock = FakeClock()
+    fe = frontend(clock=clock, capacity=8)
+    for i in range(20):
+        fe.submit("count", 0, N, deadline_s=(0.1 if i % 3 else 5.0))
+        if i % 5 == 0:
+            clock.advance(0.2)
+            fe.pump()
+    while fe.pump():
+        pass
+    st = fe.stats()
+    assert st["submitted"] == 20
+    assert st["submitted"] == st["served"] + st["total_shed"] + st["queued"]
